@@ -1,0 +1,128 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Perf hillclimbs (§Perf): build baseline + optimized variants of the three
+selected cells, compile both on the single-pod mesh, and record the roofline
+terms before/after into results/hillclimb.json.
+
+  1. dbrx-132b/train_4k      — int8-quantized FSDP expert-weight gathers
+  2. command-r-plus-104b/decode_32k — serve-resident TP layout (no per-token
+                                FSDP weight gathers)
+  3. wide-deep/train_batch   — PTT dedup-gather on the embedding id stream
+
+Usage: PYTHONPATH=src python -m benchmarks.hillclimb [--which 1 2 3]
+"""
+
+import argparse
+import dataclasses
+import json
+
+import jax
+
+from repro.launch.dryrun import _compile_costs, _extrapolate
+from repro.launch.mesh import make_production_mesh
+
+RESULTS = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "results"))
+
+
+def _costs_lm(arch_cfg_pairs, mesh, build):
+    """Compile the (scanned) deployable and the L1/L2 cost variants."""
+    spec = build(None)
+    base = _compile_costs(spec, mesh)
+    c1 = _compile_costs(build(1), mesh)
+    c2 = _compile_costs(build(2), mesh)
+    n_layers = arch_cfg_pairs.n_layers
+    out = dict(base)
+    out.update(_extrapolate(c1, c2, n_layers))
+    return out
+
+
+def hc1_dbrx(mesh):
+    from repro.configs import cells, dbrx_132b
+
+    out = {}
+    for name, quant in (("baseline", False), ("int8_gather", True)):
+        cfg = dataclasses.replace(dbrx_132b.config(), moe_quant_gather=quant)
+
+        def build(n_layers):
+            c = cfg if n_layers is None else dataclasses.replace(
+                cfg, n_layers=n_layers, scan_layers=False
+            )
+            return cells.lm_train_cell(
+                c, mesh, batch=256, seq=4096, unroll_accum=n_layers is not None
+            )
+
+        out[name] = _costs_lm(cfg, mesh, build)
+        print(f"  dbrx train {name}: flops={out[name]['flops']:.3e} "
+              f"coll={out[name]['collectives']['total_bytes']:.3e} "
+              f"temp={out[name]['memory'].get('temp_size_in_bytes',0)/(1<<30):.2f}GiB")
+    return out
+
+
+def hc2_commandr_decode(mesh):
+    from repro.configs import cells, command_r_plus_104b
+
+    cfg = command_r_plus_104b.config()
+    out = {}
+    for name, serve in (("baseline_fsdp", False), ("serve_resident_tp", True)):
+        def build(n_layers):
+            c = cfg if n_layers is None else dataclasses.replace(
+                cfg, n_layers=n_layers, scan_layers=False
+            )
+            return cells.lm_decode_cell(c, mesh, 128, 32768, serve_layout=serve)
+
+        out[name] = _costs_lm(cfg, mesh, build)
+        print(f"  command-r decode {name}: flops={out[name]['flops']:.3e} "
+              f"coll={out[name]['collectives']['total_bytes']:.3e} "
+              f"args={out[name]['memory'].get('argument_size_in_bytes',0)/(1<<30):.2f}GiB "
+              f"temp={out[name]['memory'].get('temp_size_in_bytes',0)/(1<<30):.2f}GiB")
+    return out
+
+
+def hc3_widedeep(mesh):
+    from repro.configs import cells, wide_deep
+
+    out = {}
+    # per-shard id stream: B*F/dp = 65536*40/16 = 163,840; heavy-tailed CTR
+    # streams dedup 4-10x -> cap 40,960 per shard
+    for name, cap in (("baseline", None), ("dedup_gather", 40960)):
+        cfg = dataclasses.replace(wide_deep.config(), dedup_cap=cap)
+        spec = cells.recsys_train_cell(cfg, mesh, 65536)
+        out[name] = _compile_costs(spec, mesh)
+        print(f"  wide-deep train {name}: flops={out[name]['flops']:.3e} "
+              f"coll={out[name]['collectives']['total_bytes']:.3e} "
+              f"temp={out[name]['memory'].get('temp_size_in_bytes',0)/(1<<30):.2f}GiB")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--which", nargs="*", type=int, default=[1, 2, 3])
+    args = ap.parse_args()
+    mesh = make_production_mesh(multi_pod=False)
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "hillclimb.json")
+    results = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            results = json.load(f)
+    runs = {1: ("dbrx_train_int8_gather", hc1_dbrx),
+            2: ("commandr_decode_serve_tp", hc2_commandr_decode),
+            3: ("widedeep_dedup_gather", hc3_widedeep)}
+    for i in args.which:
+        name, fn = runs[i]
+        print(f"[hillclimb {i}] {name}")
+        with jax.set_mesh(mesh):
+            pass
+        results[name] = fn(mesh)
+        with open(path, "w") as f:
+            json.dump(results, f, indent=1)
+    print("wrote", path)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Operation-count model check (paper §III.iv).
+
+Runs each operator on controlled data and verifies the measured candidate /
+unique counts reproduce the φ expressions, then reports the φ̂/φ ratio — the
+paper's analytical explanation for the observed two-orders-of-magnitude
+speedups.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.executor import create_kg
+from repro.rml import generator
+
+
+def run(sizes=(10_000, 100_000), dups=(0.25, 0.75)):
+    rows = []
+    for kind in ("SOM", "ORM", "OJM"):
+        for n in sizes:
+            for dup in dups:
+                tb = generator.make_testbed(kind, n, dup, n_poms=1, seed=23)
+                tables = {"csv:child.csv": tb.child}
+                if tb.parent is not None:
+                    tables["csv:parent.csv"] = tb.parent
+                res = create_kg(tb.doc, tables=tables)
+                st = [s for s in res.stats.values() if s.kind == kind][0]
+                ratio = st.phi_naive() / max(st.phi_optimized(), 1)
+                rows.append(
+                    dict(kind=kind, rows=n, dup=dup, Np=st.n_candidates,
+                         Sp=st.n_unique, phi=int(st.phi_optimized()),
+                         phi_naive=int(st.phi_naive()), ratio=ratio)
+                )
+                print(f"  {kind} n={n} dup={int(dup*100)}%: |Np|={st.n_candidates} "
+                      f"|Sp|={st.n_unique} phi={int(st.phi_optimized()):,} "
+                      f"phi_naive={int(st.phi_naive()):,} ratio={ratio:.1f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

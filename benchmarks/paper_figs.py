@@ -1,0 +1,80 @@
+"""Paper Figures 5 & 6: execution time of KG creation.
+
+Grid: dataset size x duplicate rate {25%, 75%} x operator {SOM, ORM, OJM} x
+n predicate-object maps, engine (SDM-RDFizer) vs baseline (SDM-RDFizer⁻).
+The naive OJM is Θ(|N_parent|·|N_child|); at 1M rows it is the paper's
+"times out" cell — we cap it with a budget and report DNF, as the paper
+reports timeouts for RMLMapper/RocketRML.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.executor import create_kg
+from repro.rml import generator
+
+NAIVE_OJM_COMPARISON_BUDGET = 1.2e10  # |Np|x|Nc| above this -> DNF (paper: timeout)
+
+
+def run_cell(kind: str, n_rows: int, dup: float, n_poms: int, engine: str,
+             repeats: int = 1) -> dict:
+    tb = generator.make_testbed(kind, n_rows, dup, n_poms=n_poms, seed=17)
+    tables = {"csv:child.csv": tb.child}
+    if tb.parent is not None:
+        tables["csv:parent.csv"] = tb.parent
+    if engine == "naive" and kind == "OJM":
+        if n_rows * n_rows * n_poms > NAIVE_OJM_COMPARISON_BUDGET:
+            return {"status": "DNF", "time_s": float("inf"), "n_triples": -1}
+    times = []
+    res = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = create_kg(tb.doc, tables=tables, engine=engine)
+        times.append(time.perf_counter() - t0)
+    return {
+        "status": "ok",
+        "time_s": min(times),
+        "n_triples": res.n_triples,
+        "stats": {
+            p: dict(kind=s.kind, Np=s.n_candidates, Sp=s.n_unique,
+                    phi=int(s.phi_optimized()), phi_naive=int(s.phi_naive()))
+            for p, s in res.stats.items()
+        },
+    }
+
+
+def sweep(sizes=(10_000, 100_000), dups=(0.25, 0.75), kinds=("SOM", "ORM", "OJM"),
+          n_poms_list=(1, 2, 4), engines=("optimized", "naive")):
+    rows = []
+    for kind in kinds:
+        for n in sizes:
+            for dup in dups:
+                for npm in n_poms_list:
+                    for eng in engines:
+                        r = run_cell(kind, n, dup, npm, eng)
+                        rows.append(
+                            dict(kind=kind, rows=n, dup=dup, n_poms=npm,
+                                 engine=eng, **{k: r[k] for k in ("status", "time_s", "n_triples")})
+                        )
+                        t = "DNF" if r["status"] == "DNF" else f"{r['time_s']:.2f}s"
+                        print(f"  {kind} n={n} dup={int(dup*100)}% poms={npm} "
+                              f"{eng:9s}: {t} triples={r['n_triples']}")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse, json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="include the 1M-row tier")
+    ap.add_argument("--out", default="results/paper_figs.json")
+    args = ap.parse_args()
+    sizes = (10_000, 100_000, 1_000_000) if args.full else (10_000, 100_000)
+    rows = sweep(sizes=sizes, n_poms_list=(1, 2, 4) if args.full else (1, 2))
+    import os
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {args.out}")

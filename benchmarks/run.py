@@ -1,0 +1,172 @@
+"""Benchmark entry point — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+
+  fig56/*      — paper Figures 5/6: KG-creation wall time, engine vs baseline
+                 (derived = naive/optimized speedup)
+  opmodel/*    — §III.iv operation-count model (derived = φ̂/φ ratio)
+  kernels/*    — Pallas kernel micro-benches vs jnp reference paths
+  dedup/*      — dedup_gather traffic/time vs plain gather
+  roofline/*   — (when results/dryrun.json exists) the three terms per cell
+
+``--full`` widens fig56 to the paper's 1M-row tier.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def _row(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def bench_fig56(full: bool) -> None:
+    from benchmarks import paper_figs
+
+    sizes = (10_000, 100_000, 1_000_000) if full else (10_000, 100_000)
+    n_poms = (1, 2, 4) if full else (1, 2)
+    for kind in ("SOM", "ORM", "OJM"):
+        for n in sizes:
+            for dup in (0.25, 0.75):
+                for npm in n_poms:
+                    opt = paper_figs.run_cell(kind, n, dup, npm, "optimized", repeats=2)
+                    nav = paper_figs.run_cell(kind, n, dup, npm, "naive", repeats=2)
+                    name = f"fig56/{kind.lower()}{npm}-{n}-{int(dup*100)}"
+                    if nav["status"] == "DNF":
+                        _row(name, opt["time_s"] * 1e6, "naive=DNF")
+                    else:
+                        _row(
+                            name, opt["time_s"] * 1e6,
+                            f"speedup={nav['time_s']/opt['time_s']:.2f}x",
+                        )
+                    assert (
+                        nav["status"] == "DNF"
+                        or nav["n_triples"] == opt["n_triples"]
+                    ), f"engine mismatch at {name}"
+
+
+def bench_op_model() -> None:
+    from benchmarks import op_model
+
+    for r in op_model.run(sizes=(10_000,), dups=(0.25, 0.75)):
+        _row(
+            f"opmodel/{r['kind'].lower()}-{r['rows']}-{int(r['dup']*100)}",
+            0.0,
+            f"phi_ratio={r['ratio']:.1f}x",
+        )
+
+
+def bench_kernels() -> None:
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import hashing
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    n = 1 << 16
+    words = jnp.asarray(rng.integers(0, 2**31, (3, n)).astype(np.int32))
+
+    def timeit(fn, *a, repeats=5):
+        jax.block_until_ready(fn(*a))
+        ts = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*a))
+            ts.append(time.perf_counter() - t0)
+        return min(ts) * 1e6
+
+    t_kernel = timeit(lambda w: ops.fused_hash_mix(w), words)
+    t_ref = timeit(jax.jit(lambda w: hashing.mix64([w[0], w[1], w[2]])), words)
+    _row("kernels/hash_mix_pallas", t_kernel, f"jnp_ref_us={t_ref:.1f}")
+
+    vals = rng.integers(0, 5000, n).astype(np.int32)
+    hi, lo = hashing.mix64([jnp.asarray(vals)])
+    valid = jnp.ones(n, bool)
+
+    table = ops.make_radix_table(4 * n, 8)
+    t_radix = timeit(
+        lambda h, l, v: ops.radix_dedup_insert(ops.make_radix_table(4 * n, 8), h, l, v)[1],
+        hi, lo, valid,
+    )
+    from repro.core import hashset
+
+    t_flat = timeit(
+        jax.jit(lambda h, l, v: hashset.insert_masked(hashset.make(4 * n), h, l, v).is_new),
+        hi, lo, valid,
+    )
+    _row("kernels/radix_dedup_pallas", t_radix, f"flat_hashset_us={t_flat:.1f}")
+
+    pk = jnp.asarray(rng.integers(0, 128, 4096).astype(np.int32))
+    ps = jnp.asarray(rng.integers(0, 10**6, 4096).astype(np.int32))
+    ck = jnp.asarray(rng.integers(0, 128, 2048).astype(np.int32))
+    K = int(np.bincount(np.asarray(pk)).max()) + 1
+    t_join = timeit(lambda a, b, c: ops.blocked_nested_join(a, b, c, K)[0], pk, ps, ck)
+    from repro.core import pjtt
+
+    idx = pjtt.build_sorted(pk, ps)
+    t_pjtt = timeit(
+        jax.jit(lambda s, u, c: pjtt.probe_sorted(pjtt.PJTTSorted(s, u), c, K).subjects),
+        idx.skeys, idx.ssubj, ck,
+    )
+    _row("kernels/nested_join_pallas", t_join, f"pjtt_index_join_us={t_pjtt:.1f}")
+
+
+def bench_dedup_gather() -> None:
+    from benchmarks import dedup_gather_bench
+
+    for r in dedup_gather_bench.run(n=65_536, dup_factors=(1, 8, 64)):
+        _row(
+            f"dedup/x{r['dup_factor']}",
+            r["t_dedup_s"] * 1e6,
+            f"plain_us={r['t_plain_s']*1e6:.1f};traffic={r['traffic_saving']:.1f}x",
+        )
+
+
+def bench_roofline() -> None:
+    from benchmarks import roofline
+
+    path = os.path.join(roofline.RESULTS, "dryrun.json")
+    if not os.path.exists(path):
+        print("# roofline: results/dryrun.json missing (run repro.launch.dryrun)",
+              flush=True)
+        return
+    for r in roofline.derive(path):
+        if r.get("status") != "ok":
+            continue
+        _row(
+            f"roofline/{r['cell']}",
+            r["t_bound_s"] * 1e6,
+            f"bound={r['bound']};frac={r.get('roofline_frac', 0)*100:.1f}%",
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    choices=(None, "fig56", "opmodel", "kernels", "dedup", "roofline"))
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    sections = {
+        "fig56": lambda: bench_fig56(args.full),
+        "opmodel": bench_op_model,
+        "kernels": bench_kernels,
+        "dedup": bench_dedup_gather,
+        "roofline": bench_roofline,
+    }
+    for name, fn in sections.items():
+        if args.only and name != args.only:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        fn()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: create an RDF knowledge graph from CSVs with the SDM-RDFizer
+engine — the paper's motivating example in miniature.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.executor import create_kg  # noqa: E402
+from repro.rml import generator, parser, serializer  # noqa: E402
+
+
+def main() -> None:
+    # 1. A biomedical-style testbed: mutations (child) joined to exons
+    #    (parent) on the ENST accession — the paper's Figure 1 scenario.
+    tb = generator.make_ojm_testbed(n_rows=5000, dup_rate=0.25, n_poms=2)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        tb.write(tmp)
+        mapping_path = os.path.join(tmp, "mapping.ttl")
+        serializer.write_turtle(tb.doc, mapping_path)
+        print(f"mapping written to {mapping_path}:")
+        print("\n".join(serializer.to_turtle(tb.doc).splitlines()[:12]), "\n...")
+
+        # 2. Parse the RML document back and create the knowledge graph.
+        doc = parser.parse_file(mapping_path)
+        result = create_kg(doc, data_root=tmp, engine="optimized")
+
+        print(f"\ncreated {result.n_triples} unique RDF triples "
+              f"in {result.wall_time_s:.2f}s")
+        for pred, st in result.stats.items():
+            print(f"  {st.kind:5s} {pred.rsplit('/', 1)[-1]:20s} "
+                  f"|N_p|={st.n_candidates:>7} |S_p|={st.n_unique:>7} "
+                  f"phi_naive/phi={st.phi_naive()/max(st.phi_optimized(),1):>8.1f}x")
+
+        # 3. Serialize a sample.
+        out = os.path.join(tmp, "kg.nt")
+        result.write_ntriples(out)
+        with open(out) as f:
+            print("\nfirst three triples:")
+            for _ in range(3):
+                print(" ", f.readline().strip())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""The paper's technique beyond RDF: PTT-style dedup-gather on the wide-deep
+recsys embedding path (DESIGN.md §5).
+
+Trains the smoke wide-deep model on a synthetic CTR stream whose id
+distribution is heavy-tailed (realistic for recsys), with and without
+dedup_gather, and shows (a) identical losses, (b) the |N| -> |S| traffic
+reduction the PTT idea buys.
+
+    PYTHONPATH=src python examples/recsys_dedup.py
+"""
+
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+
+def main() -> None:
+    from repro.configs import wide_deep
+    from repro.core.dedup_gather import dedup_gather
+    from repro.models import recsys
+    from repro.train.optimizer import AdamW
+    from repro.train.trainer import make_train_step
+
+    cfg = wide_deep.smoke_config()
+    rng = np.random.default_rng(0)
+    B = 256
+
+    # heavy-tailed ids: a few hot items dominate (Zipf) — the high-duplicate
+    # regime the paper targets
+    zipf = np.minimum(rng.zipf(1.3, size=(512, cfg.n_sparse, 1)), cfg.vocab_per_field) - 1
+    dense = rng.normal(size=(512, cfg.n_dense)).astype(np.float32)
+    w_true = rng.normal(size=cfg.n_dense).astype(np.float32)
+    labels = (dense @ w_true + 0.3 * rng.normal(size=512) > 0).astype(np.int32)
+
+    flat_ids = (
+        zipf[:B] + (np.arange(cfg.n_sparse)[None, :, None] * cfg.vocab_per_field)
+    ).reshape(-1)
+    n_unique = len(np.unique(flat_ids))
+    print(f"id stream: {len(flat_ids)} lookups, {n_unique} distinct "
+          f"(|N|/|S| = {len(flat_ids)/n_unique:.1f}x duplicate factor)")
+
+    cap = int(n_unique * 1.5)
+    cfg_dedup = dataclasses.replace(cfg, dedup_cap=cap)
+
+    for name, c in (("plain", cfg), ("dedup-gather", cfg_dedup)):
+        params = recsys.init(jax.random.PRNGKey(0), c)
+        opt = AdamW(lr=1e-2)
+        step = jax.jit(
+            make_train_step(
+                lambda p, s, d, y: recsys.loss_fn(p, c, s, d, y), opt
+            ),
+            donate_argnums=(0, 1),
+        )
+        state = opt.init(params)
+        losses = []
+        for i in range(60):
+            idx = rng.integers(0, 512, size=B)
+            params, state, m = step(
+                params, state, jnp.asarray(zipf[idx]),
+                jnp.asarray(dense[idx]), jnp.asarray(labels[idx]),
+            )
+            losses.append(float(m["loss"]))
+        print(f"  {name:14s}: loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+
+    # traffic accounting (what a row-sharded table would move across chips)
+    table = jnp.zeros((cfg.n_sparse * cfg.vocab_per_field, cfg.embed_dim))
+    res = dedup_gather(table, jnp.asarray(flat_ids.astype(np.int32)), cap)
+    print(f"\nrows fetched: plain={len(flat_ids)}  dedup={cap} "
+          f"(true unique {int(res.n_unique)}) -> "
+          f"{len(flat_ids)/cap:.1f}x less gather/collective traffic")
+
+
+if __name__ == "__main__":
+    main()

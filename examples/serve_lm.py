@@ -1,0 +1,32 @@
+"""Serve a small model with batched requests: prefill + batched decode with
+a KV cache, demonstrating the serving engine (deliverable b).
+
+    PYTHONPATH=src python examples/serve_lm.py --batch 4 --gen 48
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--gen", type=int, default=48)
+    args = ap.parse_args()
+
+    from repro.launch import serve
+
+    sys.argv = [
+        "serve", "--arch", args.arch, "--batch", str(args.batch),
+        "--prompt-len", str(args.prompt_len), "--gen", str(args.gen),
+    ]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

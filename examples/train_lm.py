@@ -1,0 +1,74 @@
+"""Train a ~100M-parameter qwen-family model for a few hundred steps on CPU
+— the end-to-end training driver at example scale (deliverable b).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--size", choices=("tiny", "100m"), default="tiny")
+    args = ap.parse_args()
+
+    from repro.configs import qwen2_5_3b
+    from repro.models import transformer
+    from repro.train.optimizer import AdamW
+    from repro.train.trainer import make_train_step
+
+    if args.size == "100m":
+        cfg = dataclasses.replace(
+            qwen2_5_3b.config(), n_layers=8, d_model=512, n_heads=8, n_kv=2,
+            head_dim=64, d_ff=2048, vocab=32000, dtype=jnp.float32,
+            sequence_parallel=False, attn_chunk=None, microbatches=1,
+        )
+    else:
+        cfg = qwen2_5_3b.smoke_config()
+    print(f"training {cfg.name} variant: {cfg.param_count()/1e6:.1f}M params")
+
+    key = jax.random.PRNGKey(0)
+    params = transformer.init(key, cfg)
+    opt = AdamW(lr=3e-3)
+    opt_state = opt.init(params)
+    step = jax.jit(
+        make_train_step(lambda p, t, l: transformer.loss_fn(cfg, p, t, l), opt),
+        donate_argnums=(0, 1),
+    )
+
+    # fixed random corpus -> loss must fall (memorization signal)
+    rng = np.random.default_rng(0)
+    corpus = rng.integers(0, cfg.vocab, size=(32, args.seq + 1)).astype(np.int32)
+
+    losses = []
+    t0 = time.perf_counter()
+    for i in range(args.steps):
+        idx = rng.integers(0, len(corpus), size=args.batch)
+        toks, labels = corpus[idx, :-1], corpus[idx, 1:]
+        params, opt_state, m = step(
+            params, opt_state, jnp.asarray(toks), jnp.asarray(labels)
+        )
+        losses.append(float(m["loss"]))
+        if i % 50 == 0:
+            print(f"step {i:4d}  loss {losses[-1]:.4f}")
+    dt = time.perf_counter() - t0
+    print(f"\n{args.steps} steps in {dt:.1f}s; loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    assert losses[-1] < losses[0], "loss did not improve"
+    print("loss improved — training works end to end")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""repro — SDM-RDFizer as a production-grade multi-pod JAX framework.
+
+The paper's contribution (PTT/PJTT physical data structures + SOM/ORM/OJM
+operators for duplicate-free RDF knowledge-graph creation) lives in
+``repro.core``.  The surrounding substrate — RML parsing, data pipeline,
+the assigned model architectures, distributed training/serving, launchers —
+lives in sibling subpackages.  See DESIGN.md for the system inventory.
+"""
+
+__version__ = "1.0.0"

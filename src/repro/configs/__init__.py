@@ -1,0 +1,1 @@
+from repro.configs.registry import ARCHS, get_arch, list_cells  # noqa: F401

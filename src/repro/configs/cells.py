@@ -1,0 +1,311 @@
+"""Cell builders: (architecture x input shape x mesh) -> lowerable spec.
+
+A *cell* is one dry-run unit: a jit-able function plus fully-sharded
+ShapeDtypeStruct arguments (no allocation).  ``jax.jit(fn).lower(*args)``
+must succeed on the production meshes for every cell — that is deliverable
+(e).  Shardings ride on the ShapeDtypeStructs via NamedSharding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import recsys, transformer
+from repro.models.gnn import common as gnn_common
+from repro.models.gnn import equiformer, gat, meshgraphnet, nequip
+from repro.train.optimizer import AdamW
+from repro.train.trainer import make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+@dataclasses.dataclass
+class CellSpec:
+    name: str              # "<arch>/<shape>"
+    kind: str              # train | prefill | decode | serve | retrieval
+    fn: Callable           # to be jitted
+    args: tuple            # pytrees of ShapeDtypeStruct (sharding attached)
+    donate: tuple = ()
+    note: str = ""
+
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=_ns(mesh, spec))
+
+
+def _attach(shapes_tree, specs_tree, mesh):
+    """Attach NamedShardings to an eval_shape'd pytree."""
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=_ns(mesh, p)),
+        shapes_tree,
+        specs_tree,
+    )
+
+
+def _dp(mesh):
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _all_axes(mesh):
+    return tuple(mesh.axis_names)
+
+
+# ----------------------------------------------------------------------- LM
+
+
+def lm_train_cell(
+    cfg: transformer.LMConfig, mesh, batch: int, seq: int,
+    unroll_accum: bool = False,
+) -> CellSpec:
+    dp = _dp(mesh)
+    opt = AdamW(lr=1e-4, weight_decay=0.1)
+    accum = cfg.microbatches
+
+    def loss(params, tokens, labels):
+        return transformer.loss_fn(cfg, params, tokens, labels, dp)
+
+    step = make_train_step(loss, opt, grad_accum=accum, unroll_accum=unroll_accum)
+
+    pshape = jax.eval_shape(partial(transformer.init, cfg=cfg), KEY)
+    pspecs = transformer.param_specs(cfg)
+    params = _attach(pshape, pspecs, mesh)
+    oshape = jax.eval_shape(opt.init, pshape)
+    ostate = _attach(oshape, opt.state_specs(pspecs), mesh)
+    if accum > 1:
+        # microbatch accumulation: (accum, B/accum, S), scanned by the step
+        tokens = _sds((accum, batch // accum, seq), jnp.int32, mesh, P(None, dp, None))
+        labels = _sds((accum, batch // accum, seq), jnp.int32, mesh, P(None, dp, None))
+    else:
+        tokens = _sds((batch, seq), jnp.int32, mesh, P(dp, None))
+        labels = _sds((batch, seq), jnp.int32, mesh, P(dp, None))
+    return CellSpec(
+        name=f"{cfg.name}/train",
+        kind="train",
+        fn=step,
+        args=(params, ostate, tokens, labels),
+        donate=(0, 1),
+    )
+
+
+def lm_prefill_cell(
+    cfg: transformer.LMConfig, mesh, batch: int, seq: int,
+    unroll_accum: bool = False,
+) -> CellSpec:
+    dp = _dp(mesh)
+
+    def fn(params, tokens):
+        return transformer.prefill(cfg, params, tokens, dp, unroll_chunks=unroll_accum)
+
+    pshape = jax.eval_shape(partial(transformer.init, cfg=cfg), KEY)
+    params = _attach(pshape, transformer.param_specs(cfg), mesh)
+    tokens = _sds((batch, seq), jnp.int32, mesh, P(dp, None))
+    return CellSpec(
+        name=f"{cfg.name}/prefill", kind="prefill", fn=fn, args=(params, tokens)
+    )
+
+
+def lm_decode_cell(
+    cfg: transformer.LMConfig, mesh, batch: int, ctx_len: int,
+    serve_layout: bool = False,
+) -> CellSpec:
+    dp = _dp(mesh)
+    # batch=1 (long_500k) cannot shard over the data axes; the serve-resident
+    # TP layout REPLICATES the (tiny) token batch so weights never move —
+    # each device contributes its 1/256 column slice and activations psum
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    cache_dp = dp if batch % dp_size == 0 else None
+    # serve-resident TP: activations replicated (weights never move), but
+    # the KV cache STAYS (batch->data, length->model) sharded
+    bdp = None if serve_layout else cache_dp
+
+    def fn(params, cache, tokens, pos):
+        return transformer.decode_step(cfg, params, cache, tokens, pos, bdp)
+
+    pshape = jax.eval_shape(partial(transformer.init, cfg=cfg), KEY)
+    params = _attach(
+        pshape, transformer.param_specs(cfg, serve=serve_layout), mesh
+    )
+    cshape = jax.eval_shape(partial(transformer.make_cache, cfg, batch, ctx_len))
+    cache = _attach(cshape, transformer.cache_specs(cfg, cache_dp), mesh)
+    tokens = _sds((batch, 1), jnp.int32, mesh, P(bdp, None))
+    pos = jax.ShapeDtypeStruct((), jnp.int32, sharding=_ns(mesh, P()))
+    note = ""
+    if cfg.window is not None and ctx_len > cfg.window:
+        note = f"SWA ring buffer: cache is O(window={cfg.window}), logical ctx {ctx_len}"
+    return CellSpec(
+        name=f"{cfg.name}/decode",
+        kind="decode",
+        fn=fn,
+        args=(params, cache, tokens, pos),
+        donate=(1,),
+        note=note,
+    )
+
+
+# ---------------------------------------------------------------------- GNN
+
+GNN_FAMILIES = {
+    "gat-cora": (gat, gat.GATConfig),
+    "meshgraphnet": (meshgraphnet, meshgraphnet.MGNConfig),
+    "nequip": (nequip, nequip.NequIPConfig),
+    "equiformer-v2": (equiformer, equiformer.EquiformerConfig),
+}
+
+
+def _graph_batch_sds(mesh, n, e, d_feat, task, n_graphs, edge_spec, node_spec):
+    f32, i32 = jnp.float32, jnp.int32
+    if task == "node_cls":
+        labels = _sds((n,), i32, mesh, node_spec)
+        lmask = _sds((n,), jnp.bool_, mesh, node_spec)
+    else:
+        labels = _sds((n_graphs,), f32, mesh, P())
+        lmask = _sds((n_graphs,), jnp.bool_, mesh, P())
+    return gnn_common.GraphBatch(
+        node_feat=_sds((n, d_feat), f32, mesh, node_spec),
+        positions=_sds((n, 3), f32, mesh, node_spec),
+        edge_src=_sds((e,), i32, mesh, edge_spec),
+        edge_dst=_sds((e,), i32, mesh, edge_spec),
+        node_mask=_sds((n,), jnp.bool_, mesh, node_spec),
+        edge_mask=_sds((e,), jnp.bool_, mesh, edge_spec),
+        labels=labels,
+        graph_id=_sds((n,), i32, mesh, node_spec),
+        label_mask=lmask,
+    )
+
+
+def gnn_train_cell(
+    arch: str, cfg, mesh, *, n, e, d_feat, task, n_classes=0, n_graphs=1,
+    shard_edges=False, shape_name="",
+) -> CellSpec:
+    module, _ = GNN_FAMILIES[arch]
+    opt = AdamW(lr=1e-3)
+
+    def loss(params, batch):
+        return module.loss_fn(params, cfg, batch, n_graphs)
+
+    step = make_train_step(loss, opt)
+    pshape = jax.eval_shape(partial(module.init, cfg=cfg), KEY)
+    # GNN params are replicated (they are small next to graph data)
+    params = _attach(pshape, jax.tree.map(lambda _: P(), pshape), mesh)
+    oshape = jax.eval_shape(opt.init, pshape)
+    ostate = _attach(oshape, jax.tree.map(lambda _: P(), oshape), mesh)
+    if shard_edges:
+        # pad the edge axis to the dp-axes product (padded edges masked);
+        # channels take the 'model' axis inside the models (channel_shard)
+        e = -(-e // 512) * 512
+    edge_spec = P(_dp(mesh)) if shard_edges else P()
+    node_spec = P()
+    batch = _graph_batch_sds(
+        mesh, n, e, d_feat, task, n_graphs, edge_spec, node_spec
+    )
+    return CellSpec(
+        name=f"{arch}/{shape_name}",
+        kind="train",
+        fn=step,
+        args=(params, ostate, batch),
+        donate=(0, 1),
+    )
+
+
+# -------------------------------------------------------------------- recsys
+
+
+def recsys_train_cell(cfg: recsys.WideDeepConfig, mesh, batch: int) -> CellSpec:
+    dp = _dp(mesh)
+    opt = AdamW(lr=1e-3)
+
+    def loss(params, sp, de, y):
+        return recsys.loss_fn(params, cfg, sp, de, y)
+
+    step = make_train_step(loss, opt)
+    pshape = jax.eval_shape(partial(recsys.init, cfg=cfg), KEY)
+    params = _attach(pshape, recsys.param_specs(cfg), mesh)
+    oshape = jax.eval_shape(opt.init, pshape)
+    ostate = _attach(oshape, AdamW().state_specs(recsys.param_specs(cfg)), mesh)
+    sp = _sds((batch, cfg.n_sparse, cfg.bag_size), jnp.int32, mesh, P(dp, None, None))
+    de = _sds((batch, cfg.n_dense), jnp.float32, mesh, P(dp, None))
+    y = _sds((batch,), jnp.int32, mesh, P(dp))
+    return CellSpec(
+        name=f"{cfg.name}/train", kind="train", fn=step,
+        args=(params, ostate, sp, de, y), donate=(0, 1),
+    )
+
+
+def recsys_serve_cell(cfg: recsys.WideDeepConfig, mesh, batch: int, shape_name: str) -> CellSpec:
+    dp = _dp(mesh)
+
+    def fn(params, sp, de):
+        return recsys.forward(params, cfg, sp, de)
+
+    pshape = jax.eval_shape(partial(recsys.init, cfg=cfg), KEY)
+    params = _attach(pshape, recsys.param_specs(cfg), mesh)
+    sp = _sds((batch, cfg.n_sparse, cfg.bag_size), jnp.int32, mesh, P(dp, None, None))
+    de = _sds((batch, cfg.n_dense), jnp.float32, mesh, P(dp, None))
+    return CellSpec(
+        name=f"{cfg.name}/{shape_name}", kind="serve", fn=fn, args=(params, sp, de)
+    )
+
+
+def recsys_retrieval_cell(
+    cfg: recsys.WideDeepConfig, mesh, n_candidates: int
+) -> CellSpec:
+    def fn(params, sp, de, cand):
+        return recsys.retrieval_scores(params, cfg, sp, de, cand)
+
+    pshape = jax.eval_shape(partial(recsys.init, cfg=cfg), KEY)
+    params = _attach(pshape, recsys.param_specs(cfg), mesh)
+    sp = _sds((1, cfg.n_sparse, cfg.bag_size), jnp.int32, mesh, P())
+    de = _sds((1, cfg.n_dense), jnp.float32, mesh, P())
+    n_dev = mesh.devices.size
+    n_candidates = -(-n_candidates // n_dev) * n_dev  # pad to the mesh size
+    cand = _sds(
+        (n_candidates, cfg.mlp[-1]), jnp.float32, mesh, P(_all_axes(mesh), None)
+    )
+    return CellSpec(
+        name=f"{cfg.name}/retrieval_cand", kind="retrieval", fn=fn,
+        args=(params, sp, de, cand),
+    )
+
+
+# ------------------------------------------------------------------ rdfizer
+
+
+def rdfizer_shuffle_cell(mesh, n_keys: int) -> CellSpec:
+    """The paper's own workload as a dry-run cell: one distributed
+    shuffle-dedup step (PTT insert) across the whole mesh."""
+    from repro.core import distributed
+
+    axes = _all_axes(mesh)
+    n_shards = mesh.devices.size
+    cap = 1 << 22  # per-shard table slots
+
+    table = distributed.ShardedPTT(
+        hi=_sds((n_shards, cap), jnp.uint32, mesh, P(axes)),
+        lo=_sds((n_shards, cap), jnp.uint32, mesh, P(axes)),
+    )
+    khi = _sds((n_keys,), jnp.uint32, mesh, P(axes))
+    klo = _sds((n_keys,), jnp.uint32, mesh, P(axes))
+    valid = _sds((n_keys,), jnp.bool_, mesh, P(axes))
+
+    def fn(thi, tlo, hi, lo, v):
+        t, is_new, ovf = distributed.distributed_insert(
+            mesh, distributed.ShardedPTT(thi, tlo), hi, lo, v
+        )
+        return t.hi, t.lo, jnp.sum(is_new), ovf
+
+    return CellSpec(
+        name="rdfizer/shuffle_dedup", kind="rdfizer", fn=fn,
+        args=(table.hi, table.lo, khi, klo, valid), donate=(0, 1),
+        note="the paper's PTT insert at mesh scale",
+    )

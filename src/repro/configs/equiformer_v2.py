@@ -1,0 +1,18 @@
+"""equiformer-v2 — SO(2)-eSCN equivariant graph attention: 12 layers,
+128 channels, l_max 6, m_max 2, 8 heads [arXiv:2306.12059]."""
+
+import dataclasses
+
+from repro.models.gnn.equiformer import EquiformerConfig
+
+
+def config() -> EquiformerConfig:
+    return EquiformerConfig(
+        n_layers=12, channels=128, l_max=6, m_max=2, n_heads=8
+    )
+
+
+def smoke_config() -> EquiformerConfig:
+    return dataclasses.replace(
+        config(), n_layers=2, channels=16, l_max=3, n_heads=4
+    )

@@ -1,0 +1,5 @@
+"""The paper's primary contribution: PTT/PJTT physical data structures and
+the SOM/ORM/OJM operators, plus the planner/executor that run RML documents
+and the distributed (shard_map) variants of the operators."""
+
+from repro.core.executor import Engine, EngineConfig, KGResult, create_kg  # noqa: F401

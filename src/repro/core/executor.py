@@ -1,0 +1,517 @@
+"""Streaming executor — the paper's engine loop, batched and jitted.
+
+Pipeline per run (paper Fig. 2):
+
+  RML doc --plan--> physical ops --stream--> jitted operator steps
+       sources -> columnar load -> dictionary encode -> fixed-shape batches
+  PTT/PJTT state threads through the jitted steps (donated buffers);
+  the Knowledge Graph Creator appends the ``is_new`` triples incrementally.
+
+Engines:
+  * ``optimized`` — the SDM-RDFizer operators (PTT incremental dedup, PJTT
+    index join).
+  * ``naive``     — SDM-RDFizer⁻: generate everything, nested-loop joins,
+    one merge-sort dedup per predicate at the end.
+
+Both produce identical knowledge graphs (asserted in tests); they differ
+only in operation count / wall-time, which is the paper's claim.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing, naive, pjtt, planner
+from repro.core import hashset
+from repro.core.hashset import next_pow2
+from repro.data import pipeline
+from repro.data.encoder import Dictionary, join_columns, render_template
+from repro.data.sources import SourceCache
+from repro.rml.model import MappingDocument
+
+
+# --------------------------------------------------------------------------
+# jitted steps (module scope: one compilation per shape, shared across ops)
+# --------------------------------------------------------------------------
+
+
+@partial(jax.jit, donate_argnums=(0, 1))
+def _dedup_step(hi, lo, subj_tmpl, subj_vals, pred_id, obj_tmpl, obj_vals, valid):
+    """SOM/ORM/CLASS step: triple keys -> masked PTT insert."""
+    khi, klo = hashing.triple_key(subj_tmpl, subj_vals, pred_id, obj_tmpl, obj_vals)
+    res = hashset.insert_masked(hashset.HashSet(hi, lo), khi, klo, valid)
+    return res.table.hi, res.table.lo, res.is_new, res.overflowed
+
+
+@partial(jax.jit, static_argnums=(8,), donate_argnums=(0, 1))
+def _ojm_sorted_step(
+    hi, lo, skeys, ssubj, subj_tmpl, subj_vals, pred_id, obj_tmpl, max_matches,
+    child_keys, valid,
+):
+    """OJM step, sorted PJTT: probe spans -> expand -> masked PTT insert."""
+    pr = pjtt.probe_sorted(pjtt.PJTTSorted(skeys, ssubj), child_keys, max_matches)
+    m, K = pr.subjects.shape
+    subj = jnp.broadcast_to(subj_vals[:, None], (m, K)).reshape(-1)
+    obj = pr.subjects.reshape(-1)
+    v = (pr.valid & valid[:, None]).reshape(-1)
+    khi, klo = hashing.triple_key(subj_tmpl, subj, pred_id, obj_tmpl, obj)
+    res = hashset.insert_masked(hashset.HashSet(hi, lo), khi, klo, v)
+    return (
+        res.table.hi, res.table.lo,
+        res.is_new.reshape(m, K), pr.subjects, v.reshape(m, K),
+        res.overflowed, pr.truncated,
+    )
+
+
+@partial(jax.jit, static_argnums=(10,), donate_argnums=(0, 1))
+def _ojm_hash_step(
+    hi, lo, tkey, tstart, tcount, ssubj, subj_tmpl, subj_vals, pred_id, obj_tmpl,
+    max_matches, child_keys, valid,
+):
+    """OJM step, hash PJTT."""
+    pr = pjtt.probe_hash(
+        pjtt.PJTTHash(tkey, tstart, tcount, ssubj), child_keys, max_matches
+    )
+    m, K = pr.subjects.shape
+    subj = jnp.broadcast_to(subj_vals[:, None], (m, K)).reshape(-1)
+    obj = pr.subjects.reshape(-1)
+    v = (pr.valid & valid[:, None]).reshape(-1)
+    khi, klo = hashing.triple_key(subj_tmpl, subj, pred_id, obj_tmpl, obj)
+    res = hashset.insert_masked(hashset.HashSet(hi, lo), khi, klo, v)
+    return (
+        res.table.hi, res.table.lo,
+        res.is_new.reshape(m, K), pr.subjects, v.reshape(m, K),
+        res.overflowed, pr.truncated,
+    )
+
+
+@jax.jit
+def _naive_keys_step(subj_tmpl, subj_vals, pred_id, obj_tmpl, obj_vals):
+    return hashing.triple_key(subj_tmpl, subj_vals, pred_id, obj_tmpl, obj_vals)
+
+
+@partial(jax.jit, static_argnums=(2,))
+def _naive_join_step(parent_keys, parent_subjects, max_matches, child_keys):
+    return naive.nested_loop_join(parent_keys, parent_subjects, child_keys, max_matches)
+
+
+@jax.jit
+def _naive_dedup(khi, klo, valid):
+    return naive.sort_dedup_masked(khi, klo, valid)
+
+
+@jax.jit
+def _build_sorted(keys, subjects):
+    return pjtt.build_sorted(keys, subjects)
+
+
+@jax.jit
+def _build_hash(keys, subjects):
+    return pjtt.build_hash(keys, subjects)
+
+
+@jax.jit
+def _span_stats(skeys, child_keys):
+    s = jnp.searchsorted(skeys, child_keys, side="left")
+    e = jnp.searchsorted(skeys, child_keys, side="right")
+    cnt = e - s
+    return jnp.sum(cnt), jnp.max(cnt)
+
+
+# --------------------------------------------------------------------------
+# results
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PredicateStats:
+    """Per-predicate cost accounting, mirroring the paper's φ expressions."""
+
+    kind: str
+    n_candidates: int = 0   # |N_p|
+    n_unique: int = 0       # |S_p|
+    n_parent: int = 0
+    n_child: int = 0
+
+    def phi_optimized(self) -> float:
+        base = self.n_candidates + 2 * self.n_unique
+        if self.kind == "OJM":
+            return 2 * self.n_parent + self.n_child + base
+        return base
+
+    def phi_naive(self) -> float:
+        n = max(self.n_candidates, 1)
+        base = self.n_candidates + self.n_unique + n * np.log2(n)
+        if self.kind == "OJM":
+            return self.n_parent * self.n_child + base
+        return base
+
+
+@dataclasses.dataclass
+class KGResult:
+    """The created knowledge graph, term-id form + dictionaries for decode."""
+
+    dictionary: Dictionary
+    # predicate -> dict of parallel int32 arrays
+    triples: dict[str, dict[str, np.ndarray]]
+    stats: dict[str, PredicateStats]
+    wall_time_s: float = 0.0
+    engine: str = "optimized"
+
+    @property
+    def n_triples(self) -> int:
+        return sum(len(t["subj_val"]) for t in self.triples.values())
+
+    def iter_ntriples(self):
+        d = self.dictionary
+        for pred, t in self.triples.items():
+            for i in range(len(t["subj_val"])):
+                s = _render(d, int(t["subj_pat"][i]), int(t["subj_val"][i]))
+                o = _render(d, int(t["obj_pat"][i]), int(t["obj_val"][i]))
+                yield f"{s} <{pred}> {o} ."
+
+    def write_ntriples(self, path: str) -> int:
+        n = 0
+        with open(path, "w", encoding="utf-8") as f:
+            for line in self.iter_ntriples():
+                f.write(line + "\n")
+                n += 1
+        return n
+
+    def as_set(self) -> set[tuple]:
+        """Exact triple identity set (for engine-equivalence assertions)."""
+        out = set()
+        for pred, t in self.triples.items():
+            for i in range(len(t["subj_val"])):
+                out.add(
+                    (
+                        pred,
+                        int(t["subj_pat"][i]),
+                        int(t["subj_val"][i]),
+                        int(t["obj_pat"][i]),
+                        int(t["obj_val"][i]),
+                    )
+                )
+        return out
+
+
+def _render(d: Dictionary, pat_id: int, val_id: int) -> str:
+    pat = d.decode_scalar(pat_id)
+    kind, pattern = pat.split(":", 1)
+    value = d.decode_scalar(val_id) if "{}" in pattern else ""
+    body = render_template(pattern, value) if "{}" in pattern else pattern
+    if kind == "iri":
+        return f"<{body}>"
+    return '"' + body.replace('"', '\\"') + '"'
+
+
+# --------------------------------------------------------------------------
+# the engine
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    engine: str = "optimized"        # optimized | naive
+    join_strategy: str = "sorted"    # sorted | hash
+    batch_size: int = 1 << 16
+    load_factor: float = 0.6
+    max_matches: int | None = None   # None -> derived from true max span
+
+
+class Engine:
+    def __init__(self, config: EngineConfig | None = None):
+        self.config = config or EngineConfig()
+
+    # -- helpers -------------------------------------------------------------
+
+    def _term_values(
+        self, dct: Dictionary, table: dict[str, np.ndarray], columns: tuple[str, ...]
+    ) -> np.ndarray:
+        if not columns:  # constant term: single id 0 slot (value unused)
+            n = len(next(iter(table.values()))) if table else 0
+            return np.zeros(n, dtype=np.int32)
+        return dct.encode(join_columns([table[c] for c in columns]))
+
+    def run(
+        self,
+        doc: MappingDocument,
+        data_root: str = ".",
+        tables: dict[str, dict[str, np.ndarray]] | None = None,
+    ) -> KGResult:
+        """Create the knowledge graph.  ``tables`` optionally bypasses disk:
+        maps source key ('csv:child.csv') -> columnar dict."""
+        t0 = time.perf_counter()
+        cfg = self.config
+        exec_plan = planner.plan(doc)
+        dct = Dictionary()
+        cache = SourceCache(data_root)
+
+        def get_table(source_key: str):
+            if tables is not None and source_key in tables:
+                return tables[source_key]
+            fmt, path = source_key.split(":", 1)
+            from repro.rml.model import LogicalSource
+
+            return cache.get(LogicalSource(path=path, fmt=fmt))
+
+        # ---- encode the value columns each op needs (once per column set)
+        value_cache: dict[tuple, np.ndarray] = {}
+
+        def values_for(source_key: str, columns: tuple[str, ...]) -> np.ndarray:
+            key = (source_key, columns)
+            if key not in value_cache:
+                value_cache[key] = self._term_values(
+                    dct, get_table(source_key), columns
+                )
+            return value_cache[key]
+
+        # ---- build PJTTs once per (parent map, join column)
+        indexes: dict[str, tuple] = {}
+        parent_meta: dict[str, tuple[int, np.ndarray]] = {}
+        for pkey, (psrc, pcol, _ppat, pcols) in exec_plan.pjtt_builds.items():
+            pkeys = values_for(psrc, (pcol,))
+            psubj = values_for(psrc, pcols)
+            kd = jnp.asarray(pkeys)
+            sd = jnp.asarray(psubj)
+            if cfg.engine == "naive":
+                indexes[pkey] = (kd, sd)  # raw arrays for the nested loop
+            elif cfg.join_strategy == "hash":
+                indexes[pkey] = _build_hash(kd, sd)
+            else:
+                indexes[pkey] = _build_sorted(kd, sd)
+            parent_meta[pkey] = (len(pkeys), np.asarray(pkeys))
+
+        # ---- per-predicate candidate estimate -> PTT capacity
+        stats: dict[str, PredicateStats] = {}
+        pred_candidates: dict[str, int] = {}
+        op_spans: dict[int, tuple[int, int]] = {}  # op idx -> (|N_p|, max span)
+        for pred, op_idxs in exec_plan.by_predicate.items():
+            total = 0
+            kind = exec_plan.ops[op_idxs[0]].kind
+            for i in op_idxs:
+                op = exec_plan.ops[i]
+                n_child = len(values_for(op.source_key, op.subj_columns))
+                if op.kind == "OJM":
+                    # exact |N_p| and max span from the sorted parent keys;
+                    # sizes the PTT and the padded-ragged probe width
+                    skeys = jnp.sort(
+                        jnp.asarray(
+                            values_for(op.parent_source_key, (op.parent_join_column,))
+                        )
+                    )
+                    ck = jnp.asarray(
+                        values_for(op.source_key, (op.join_child_column,))
+                    )
+                    tot, mx = _span_stats(skeys, ck)
+                    op_spans[i] = (int(tot), int(mx))
+                    total += int(tot)
+                else:
+                    op_spans[i] = (n_child, 1)
+                    total += n_child
+            pred_candidates[pred] = total
+            stats[pred] = PredicateStats(kind=kind)
+
+        # ---- run the ops
+        triples_out: dict[str, dict[str, list[np.ndarray]]] = {}
+        if cfg.engine == "optimized":
+            self._run_optimized(
+                exec_plan, values_for, indexes, pred_candidates, op_spans,
+                stats, triples_out, dct,
+            )
+        else:
+            self._run_naive(
+                exec_plan, values_for, indexes, op_spans, stats, triples_out, dct
+            )
+
+        final = {
+            pred: {k: np.concatenate(v) if v else np.zeros(0, np.int32) for k, v in t.items()}
+            for pred, t in triples_out.items()
+        }
+        return KGResult(
+            dictionary=dct,
+            triples=final,
+            stats=stats,
+            wall_time_s=time.perf_counter() - t0,
+            engine=cfg.engine,
+        )
+
+    # -- optimized engine ------------------------------------------------------
+
+    def _run_optimized(
+        self, exec_plan, values_for, indexes, pred_candidates, op_spans,
+        stats, triples_out, dct: Dictionary,
+    ):
+        cfg = self.config
+        for pred, op_idxs in exec_plan.by_predicate.items():
+            cap = next_pow2(int(pred_candidates[pred] / cfg.load_factor) + 16)
+            while True:  # overflow -> double capacity and replay the predicate
+                table = hashset.make(cap)
+                hi, lo = table.hi, table.lo
+                out = {k: [] for k in ("subj_pat", "subj_val", "obj_pat", "obj_val")}
+                st = stats[pred]
+                st.n_candidates = st.n_unique = st.n_parent = st.n_child = 0
+                overflow = False
+                for i in op_idxs:
+                    op = exec_plan.ops[i]
+                    pid = np.int32(dct.encode_scalar(op.predicate))
+                    spat = np.int32(dct.encode_scalar(op.subj_pattern))
+                    opat = np.int32(dct.encode_scalar(op.obj_pattern))
+                    subj_vals = values_for(op.source_key, op.subj_columns)
+                    cols = {"subj": subj_vals}
+                    if op.kind == "OJM":
+                        cols["jkey"] = values_for(
+                            op.source_key, (op.join_child_column,)
+                        )
+                    elif op.kind in ("SOM", "ORM"):
+                        cols["obj"] = values_for(op.source_key, op.obj_columns)
+                    else:  # CLASS: constant object
+                        cols["obj"] = np.zeros_like(subj_vals)
+
+                    n = len(subj_vals)
+                    bs = min(cfg.batch_size, pipeline.pick_batch_size(n))
+                    if op.kind == "OJM":
+                        tot, mx = op_spans[i]
+                        K = cfg.max_matches or max(int(mx), 1)
+                        st.n_parent += (
+                            len(values_for(op.parent_source_key, (op.parent_join_column,)))
+                        )
+                        st.n_child += n
+                    for batch in pipeline.batches(cols, bs):
+                        valid = jnp.asarray(batch.valid)
+                        sv = jnp.asarray(batch.arrays["subj"])
+                        if op.kind == "OJM":
+                            idx = indexes[op.pjtt_key]
+                            ck = jnp.asarray(batch.arrays["jkey"])
+                            if isinstance(idx, pjtt.PJTTSorted):
+                                hi, lo, is_new, psubj, v, ovf, trunc = _ojm_sorted_step(
+                                    hi, lo, idx.skeys, idx.ssubj, spat, sv, pid,
+                                    opat, K, ck, valid,
+                                )
+                            else:
+                                hi, lo, is_new, psubj, v, ovf, trunc = _ojm_hash_step(
+                                    hi, lo, idx.tkey, idx.tstart, idx.tcount,
+                                    idx.ssubj, spat, sv, pid, opat, K, ck, valid,
+                                )
+                            if bool(trunc):
+                                raise RuntimeError(
+                                    f"PJTT span exceeded max_matches={K}; "
+                                    "re-run with a larger max_matches"
+                                )
+                            is_new_np = np.asarray(is_new)
+                            v_np = np.asarray(v)
+                            st.n_candidates += int(v_np.sum())
+                            emit = is_new_np & v_np
+                            rows, ks = np.nonzero(emit)
+                            sv_np = np.asarray(batch.arrays["subj"])
+                            ps_np = np.asarray(psubj)
+                            out["subj_val"].append(sv_np[rows].astype(np.int32))
+                            out["obj_val"].append(ps_np[rows, ks].astype(np.int32))
+                            n_emit = len(rows)
+                        else:
+                            ov = jnp.asarray(batch.arrays["obj"])
+                            hi, lo, is_new, ovf = _dedup_step(
+                                hi, lo, spat, sv, pid, opat, ov, valid
+                            )
+                            is_new_np = np.asarray(is_new)
+                            st.n_candidates += int(batch.valid.sum())
+                            rows = np.nonzero(is_new_np & batch.valid)[0]
+                            out["subj_val"].append(
+                                batch.arrays["subj"][rows].astype(np.int32)
+                            )
+                            out["obj_val"].append(
+                                batch.arrays["obj"][rows].astype(np.int32)
+                            )
+                            n_emit = len(rows)
+                        out["subj_pat"].append(np.full(n_emit, spat, np.int32))
+                        out["obj_pat"].append(np.full(n_emit, opat, np.int32))
+                        st.n_unique += n_emit
+                        if bool(ovf):
+                            overflow = True
+                            break
+                    if overflow:
+                        break
+                if not overflow:
+                    triples_out[pred] = out
+                    break
+                cap *= 2  # replay this predicate with a bigger table
+
+    # -- naive engine ----------------------------------------------------------
+
+    def _run_naive(
+        self, exec_plan, values_for, indexes, op_spans, stats, triples_out, dct
+    ):
+        cfg = self.config
+        for pred, op_idxs in exec_plan.by_predicate.items():
+            khis, klos, valids = [], [], []
+            svs, ovs, spats, opats = [], [], [], []
+            st = stats[pred]
+            for i in op_idxs:
+                op = exec_plan.ops[i]
+                pid = np.int32(dct.encode_scalar(op.predicate))
+                spat = np.int32(dct.encode_scalar(op.subj_pattern))
+                opat = np.int32(dct.encode_scalar(op.obj_pattern))
+                subj_vals = values_for(op.source_key, op.subj_columns)
+                n = len(subj_vals)
+                if op.kind == "OJM":
+                    pkeys, psubj = indexes[op.pjtt_key]
+                    tot, mx = op_spans[i]
+                    K = cfg.max_matches or max(int(mx), 1)
+                    ck = jnp.asarray(values_for(op.source_key, (op.join_child_column,)))
+                    jr = _naive_join_step(pkeys, psubj, K, ck)
+                    if bool(jr.truncated):
+                        raise RuntimeError("naive join exceeded max_matches")
+                    m = n
+                    subj = np.broadcast_to(subj_vals[:, None], (m, K)).reshape(-1)
+                    obj = np.asarray(jr.subjects).reshape(-1)
+                    v = np.asarray(jr.valid).reshape(-1)
+                    khi, klo = _naive_keys_step(
+                        spat, jnp.asarray(subj), pid, opat, jnp.asarray(obj)
+                    )
+                    st.n_parent += pkeys.shape[0]
+                    st.n_child += n
+                else:
+                    if op.kind == "CLASS":
+                        obj = np.zeros_like(subj_vals)
+                    else:
+                        obj = values_for(op.source_key, op.obj_columns)
+                    subj, v = subj_vals, np.ones(n, bool)
+                    khi, klo = _naive_keys_step(
+                        spat, jnp.asarray(subj), pid, opat, jnp.asarray(obj)
+                    )
+                khis.append(np.asarray(khi))
+                klos.append(np.asarray(klo))
+                valids.append(v)
+                svs.append(np.asarray(subj, dtype=np.int32))
+                ovs.append(np.asarray(obj, dtype=np.int32))
+                spats.append(np.full(len(v), spat, np.int32))
+                opats.append(np.full(len(v), opat, np.int32))
+            khi = np.concatenate(khis)
+            klo = np.concatenate(klos)
+            v = np.concatenate(valids)
+            st.n_candidates = int(v.sum())
+            dd = _naive_dedup(jnp.asarray(khi), jnp.asarray(klo), jnp.asarray(v))
+            mask = np.asarray(dd.uniq_mask)
+            st.n_unique = int(mask.sum())
+            triples_out[pred] = {
+                "subj_pat": [np.concatenate(spats)[mask]],
+                "subj_val": [np.concatenate(svs)[mask]],
+                "obj_pat": [np.concatenate(opats)[mask]],
+                "obj_val": [np.concatenate(ovs)[mask]],
+            }
+
+
+def create_kg(
+    doc: MappingDocument,
+    data_root: str = ".",
+    tables=None,
+    **config,
+) -> KGResult:
+    """One-call public API: parse-level document -> knowledge graph."""
+    return Engine(EngineConfig(**config)).run(doc, data_root=data_root, tables=tables)

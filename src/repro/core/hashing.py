@@ -1,0 +1,87 @@
+"""64-bit hashing on TPU-native 32-bit lanes.
+
+TPUs have no native 64-bit integer datapath (XLA emulates ``s64`` with pairs
+of ``u32`` ops), and jax defaults to ``x64`` disabled.  We therefore represent
+a 64-bit hash as an explicit pair of ``uint32`` arrays ``(hi, lo)`` and build
+the mixing functions from 32-bit arithmetic.  This *is* the TPU-native
+adaptation of the paper's hash keys (DESIGN.md §2): every RDF triple is
+collapsed to a 64-bit key ``h(subject, predicate, object)`` and all duplicate
+elimination happens on those keys.
+
+The mixer is murmur3's 32-bit finalizer applied per-lane with cross-lane
+feedback, which gives full 64-bit avalanche for our purposes (validated by
+collision tests in ``tests/test_hashing.py``).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Sentinel marking an empty hash-set slot.  ``mix64`` never returns the
+# sentinel pair (it is explicitly remapped), so EMPTY is unambiguous.
+EMPTY: int = 0xFFFFFFFF
+
+# plain ints (not jnp arrays): Pallas kernels may not capture traced
+# constants, so these are materialized inline as u32 literals at trace time
+_M3_C1 = 0x85EBCA6B
+_M3_C2 = 0xC2B2AE35
+_GOLDEN = 0x9E3779B9  # 2^32 / phi — Weyl increment
+
+
+def _u32(x) -> jnp.ndarray:
+    return jnp.asarray(x).astype(jnp.uint32)
+
+
+def fmix32(h: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 32-bit finalizer: full avalanche on a uint32 lane."""
+    h = _u32(h)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(_M3_C1)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(_M3_C2)
+    h = h ^ (h >> 16)
+    return h
+
+
+def combine32(acc: jnp.ndarray, word: jnp.ndarray) -> jnp.ndarray:
+    """Fold one uint32 word into a running accumulator (boost::hash_combine
+    style, with the murmur finalizer as the mixer)."""
+    acc = _u32(acc)
+    word = fmix32(_u32(word))
+    return fmix32(acc ^ (word + jnp.uint32(_GOLDEN) + (acc << 6) + (acc >> 2)))
+
+
+def mix64(words, salt: int = 0) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Hash a sequence of int32/uint32 arrays (broadcastable) to a 64-bit key
+    expressed as ``(hi, lo)`` uint32 pairs.
+
+    Two independent accumulator lanes are seeded differently and each absorbs
+    every word; the lanes are cross-mixed at the end so hi and lo are not
+    correlated.  The EMPTY/EMPTY sentinel pair is remapped to keep it
+    reserved for "unoccupied slot".
+    """
+    hi = fmix32(jnp.uint32(0x243F6A88 ^ (salt & 0xFFFFFFFF)))  # pi fractional
+    lo = fmix32(jnp.uint32(0x13198A2E ^ ((salt >> 32) & 0xFFFFFFFF)))
+    for w in words:
+        w = _u32(w)
+        hi = combine32(hi, w)
+        lo = combine32(lo, w ^ jnp.uint32(_GOLDEN))
+    # cross-lane avalanche
+    hi2 = fmix32(hi ^ (lo >> 1))
+    lo2 = fmix32(lo ^ (hi << 1) ^ jnp.uint32(1))
+    # keep the sentinel reserved
+    is_sent = (hi2 == jnp.uint32(EMPTY)) & (lo2 == jnp.uint32(EMPTY))
+    lo2 = jnp.where(is_sent, jnp.uint32(EMPTY - 1), lo2)
+    return hi2, lo2
+
+
+def triple_key(
+    subj_tmpl, subj_val, pred_id, obj_tmpl, obj_val
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """64-bit identity of an RDF triple from its dictionary-encoded parts.
+
+    ``*_tmpl`` are term-template ids (static per mapping rule), ``*_val`` the
+    per-row value ids, ``pred_id`` the predicate's term id.  This is the PTT
+    hash key of the paper, computed vectorized on device.
+    """
+    return mix64([subj_tmpl, subj_val, pred_id, obj_tmpl, obj_val])

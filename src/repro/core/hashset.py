@@ -1,0 +1,200 @@
+"""Fixed-capacity open-addressing hash set — the TPU-native PTT core.
+
+The paper's Predicate Tuple Table is a CPU hash table probed one triple at a
+time.  The TPU-native equivalent (DESIGN.md §2) is a *batched* insert over a
+flat pair of uint32 arrays:
+
+  round r:   slot_r(k) = (base(k) + r * step(k)) mod capacity      (double hash)
+    1. gather occupants at every active key's slot
+    2. keys whose occupant == key           -> done, duplicate
+    3. keys whose occupant is EMPTY         -> try to claim: scatter-min the
+       candidate's batch index into an arbitration array; exactly one winner
+       per slot.  Winners write their key (unique slots -> plain scatter) and
+       are done, new.
+    4. losers re-read the slot after the winners' writes: if the new occupant
+       equals their key (a same-key twin won), they are done, duplicate;
+       otherwise they advance to round r+1.
+
+First-wins semantics of the paper are preserved: two copies of the same key in
+one batch elect exactly one winner.  The open-addressing lookup invariant
+holds because a key only ever skips slots that are occupied by *other* keys.
+
+Everything is functional: ``insert`` returns a new table.  Use
+``jax.jit(..., donate_argnums=...)`` in callers to update in place.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import EMPTY
+
+MAX_PROBE_ROUNDS = 64
+_I32_MAX = jnp.iinfo(jnp.int32).max
+
+
+class HashSet(NamedTuple):
+    """State of the set: parallel (hi, lo) key arrays, power-of-two sized."""
+
+    hi: jnp.ndarray  # uint32[capacity]
+    lo: jnp.ndarray  # uint32[capacity]
+
+    @property
+    def capacity(self) -> int:
+        return self.hi.shape[0]
+
+
+class InsertResult(NamedTuple):
+    table: HashSet
+    is_new: jnp.ndarray      # bool[n]  True -> key was not present before
+    overflowed: jnp.ndarray  # bool[]   some key exhausted MAX_PROBE_ROUNDS
+
+
+def next_pow2(n: int) -> int:
+    n = max(int(n), 2)
+    return 1 << (n - 1).bit_length()
+
+
+def make(capacity: int) -> HashSet:
+    """Allocate an empty set.  ``capacity`` is rounded up to a power of two;
+    keep load factor <= 0.7 (the planner enforces this)."""
+    cap = next_pow2(capacity)
+    return HashSet(
+        hi=jnp.full((cap,), EMPTY, dtype=jnp.uint32),
+        lo=jnp.full((cap,), EMPTY, dtype=jnp.uint32),
+    )
+
+
+def _probe_geometry(key_hi: jnp.ndarray, key_lo: jnp.ndarray, cap: int):
+    mask = jnp.uint32(cap - 1)
+    base = key_lo & mask
+    step = (key_hi | jnp.uint32(1)) & mask  # odd -> coprime with pow2 capacity
+    step = step | jnp.uint32(1)
+    return base, step, mask
+
+
+class _S(NamedTuple):
+    hi: jnp.ndarray
+    lo: jnp.ndarray
+    done: jnp.ndarray
+    is_new: jnp.ndarray
+    rnd: jnp.ndarray
+
+
+def _insert_impl(
+    table: HashSet,
+    key_hi: jnp.ndarray,
+    key_lo: jnp.ndarray,
+    done0: jnp.ndarray,
+) -> InsertResult:
+    cap = table.capacity
+    n = key_hi.shape[0]
+    base, step, mask = _probe_geometry(key_hi, key_lo, cap)
+    idx = jnp.arange(n, dtype=jnp.int32)
+
+    def cond(s: _S):
+        return (~jnp.all(s.done)) & (s.rnd < MAX_PROBE_ROUNDS)
+
+    def body(s: _S) -> _S:
+        slot = ((base + s.rnd.astype(jnp.uint32) * step) & mask).astype(jnp.int32)
+        occ_hi = s.hi[slot]
+        occ_lo = s.lo[slot]
+        active = ~s.done
+        found = active & (occ_hi == key_hi) & (occ_lo == key_lo)
+        empty = active & (occ_hi == jnp.uint32(EMPTY)) & (occ_lo == jnp.uint32(EMPTY))
+
+        # Arbitrate empty-slot claims: scatter-min of the batch index; exactly
+        # one winner per slot.  Out-of-range index ``cap`` + mode="drop"
+        # silences inactive lanes.
+        claim = jnp.full((cap,), _I32_MAX, dtype=jnp.int32)
+        claim = claim.at[jnp.where(empty, slot, cap)].min(
+            jnp.where(empty, idx, _I32_MAX), mode="drop"
+        )
+        won = empty & (claim[slot] == idx)
+
+        new_hi = s.hi.at[jnp.where(won, slot, cap)].set(key_hi, mode="drop")
+        new_lo = s.lo.at[jnp.where(won, slot, cap)].set(key_lo, mode="drop")
+
+        # Losers re-read: a same-key twin that won this round makes this key
+        # a duplicate; without this re-check the twin would be inserted twice.
+        lost = active & ~found & ~won
+        twin = lost & (new_hi[slot] == key_hi) & (new_lo[slot] == key_lo)
+
+        return _S(
+            hi=new_hi,
+            lo=new_lo,
+            done=s.done | found | won | twin,
+            is_new=s.is_new | won,
+            rnd=s.rnd + 1,
+        )
+
+    init = _S(
+        hi=table.hi,
+        lo=table.lo,
+        done=done0,
+        is_new=jnp.zeros((n,), dtype=bool),
+        rnd=jnp.int32(0),
+    )
+    out = jax.lax.while_loop(cond, body, init)
+    return InsertResult(
+        table=HashSet(hi=out.hi, lo=out.lo),
+        is_new=out.is_new,
+        overflowed=~jnp.all(out.done),
+    )
+
+
+def insert(table: HashSet, key_hi: jnp.ndarray, key_lo: jnp.ndarray) -> InsertResult:
+    """Batched insert of n keys.  Returns the updated table, an ``is_new``
+    mask, and an overflow flag (True if any key could not be placed within
+    MAX_PROBE_ROUNDS — the caller must rebuild with a larger capacity)."""
+    done0 = jnp.zeros((key_hi.shape[0],), dtype=bool)
+    return _insert_impl(table, key_hi, key_lo, done0)
+
+
+def insert_masked(
+    table: HashSet, key_hi: jnp.ndarray, key_lo: jnp.ndarray, valid: jnp.ndarray
+) -> InsertResult:
+    """Insert only lanes where ``valid``; invalid lanes report is_new=False."""
+    return _insert_impl(table, key_hi, key_lo, ~valid)
+
+
+def contains(table: HashSet, key_hi: jnp.ndarray, key_lo: jnp.ndarray) -> jnp.ndarray:
+    """Batched membership probe (no mutation)."""
+    cap = table.capacity
+    n = key_hi.shape[0]
+    base, step, mask = _probe_geometry(key_hi, key_lo, cap)
+
+    class _C(NamedTuple):
+        done: jnp.ndarray
+        found: jnp.ndarray
+        rnd: jnp.ndarray
+
+    def cond(s: _C):
+        return (~jnp.all(s.done)) & (s.rnd < MAX_PROBE_ROUNDS)
+
+    def body(s: _C) -> _C:
+        slot = ((base + s.rnd.astype(jnp.uint32) * step) & mask).astype(jnp.int32)
+        occ_hi = table.hi[slot]
+        occ_lo = table.lo[slot]
+        active = ~s.done
+        hit = active & (occ_hi == key_hi) & (occ_lo == key_lo)
+        empty = active & (occ_hi == jnp.uint32(EMPTY)) & (occ_lo == jnp.uint32(EMPTY))
+        return _C(s.done | hit | empty, s.found | hit, s.rnd + 1)
+
+    init = _C(
+        done=jnp.zeros((n,), dtype=bool),
+        found=jnp.zeros((n,), dtype=bool),
+        rnd=jnp.int32(0),
+    )
+    out = jax.lax.while_loop(cond, body, init)
+    return out.found
+
+
+def count(table: HashSet) -> jnp.ndarray:
+    """Number of occupied slots (= number of distinct keys inserted)."""
+    return jnp.sum(
+        ~((table.hi == jnp.uint32(EMPTY)) & (table.lo == jnp.uint32(EMPTY)))
+    ).astype(jnp.int32)

@@ -1,0 +1,59 @@
+"""Predicate Tuple Table — per-predicate duplicate-elimination table.
+
+A PTT is a :class:`repro.core.hashset.HashSet` over 64-bit triple keys (see
+``hashing.triple_key``).  One PTT exists per predicate appearing in any
+triples map, exactly as in the paper; the executor owns the ``pred -> PTT``
+dictionary and threads table state through the jitted operator calls.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import hashing, hashset
+
+
+class PTT(NamedTuple):
+    table: hashset.HashSet
+
+    @property
+    def capacity(self) -> int:
+        return self.table.capacity
+
+
+def make(expected_distinct: int, load_factor: float = 0.6) -> PTT:
+    """Size the table for an expected number of distinct triples."""
+    return PTT(table=hashset.make(int(expected_distinct / load_factor) + 16))
+
+
+class TripleInsertResult(NamedTuple):
+    ptt: "PTT"
+    is_new: jnp.ndarray
+    overflowed: jnp.ndarray
+
+
+def insert_triples(
+    ptt: PTT,
+    subj_tmpl,
+    subj_vals: jnp.ndarray,
+    pred_id,
+    obj_tmpl,
+    obj_vals: jnp.ndarray,
+    valid: jnp.ndarray | None = None,
+) -> TripleInsertResult:
+    """Probe+insert a batch of candidate triples; ``is_new`` marks the ones
+    that must be emitted to the knowledge graph (the paper's PTT check)."""
+    hi, lo = hashing.triple_key(subj_tmpl, subj_vals, pred_id, obj_tmpl, obj_vals)
+    if valid is None:
+        res = hashset.insert(ptt.table, hi, lo)
+    else:
+        res = hashset.insert_masked(ptt.table, hi, lo, valid)
+    return TripleInsertResult(
+        ptt=PTT(table=res.table), is_new=res.is_new, overflowed=res.overflowed
+    )
+
+
+def distinct_count(ptt: PTT) -> jnp.ndarray:
+    return hashset.count(ptt.table)

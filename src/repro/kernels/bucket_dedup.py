@@ -1,0 +1,83 @@
+"""Pallas kernel: radix-partitioned open-addressing dedup-insert.
+
+The TPU-native PTT insert (DESIGN.md §6.1).  A naive port of the paper's
+hash table touches HBM per probe; instead the key stream is pre-partitioned
+by a radix of the key hash so that partition p only ever probes table slice
+p.  The kernel then runs the *entire* probe/claim loop with both the key
+block and its table slice resident in VMEM:
+
+    HBM traffic = one pass over the keys + one pass over the table slices
+                  (vs Θ(probes) random HBM touches).
+
+Grid: one step per partition.  Blocks: keys (1, part_len), table (1, cap).
+The in-kernel algorithm is exactly ``hashset._insert_impl`` (same
+arbitration, same first-wins semantics) applied to the VMEM-resident slice,
+so the kernel is bit-identical to the reference oracle by construction —
+asserted over shape sweeps in tests.
+
+The table aliases input->output (in-place update, no copy).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import hashset
+
+
+def _kernel(khi_ref, klo_ref, valid_ref, thi_ref, tlo_ref,
+            out_thi_ref, out_tlo_ref, is_new_ref, ovf_ref):
+    khi = khi_ref[0]
+    klo = klo_ref[0]
+    valid = valid_ref[0] != 0
+    table = hashset.HashSet(thi_ref[0], tlo_ref[0])
+    res = hashset.insert_masked(table, khi, klo, valid)
+    out_thi_ref[0] = res.table.hi
+    out_tlo_ref[0] = res.table.lo
+    is_new_ref[0] = res.is_new.astype(jnp.uint32)
+    ovf_ref[0, 0] = res.overflowed.astype(jnp.uint32)
+
+
+def bucket_dedup(
+    keys_hi: jnp.ndarray,   # uint32[n_parts, part_len]
+    keys_lo: jnp.ndarray,
+    valid: jnp.ndarray,     # bool[n_parts, part_len]
+    table_hi: jnp.ndarray,  # uint32[n_parts, cap]
+    table_lo: jnp.ndarray,
+    interpret: bool = True,
+):
+    """Returns (table_hi', table_lo', is_new bool[n_parts, part_len],
+    overflow bool[n_parts])."""
+    n_parts, part_len = keys_hi.shape
+    cap = table_hi.shape[1]
+    grid = (n_parts,)
+    row = lambda i: (i, 0)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, part_len), row),
+            pl.BlockSpec((1, part_len), row),
+            pl.BlockSpec((1, part_len), row),
+            pl.BlockSpec((1, cap), row),
+            pl.BlockSpec((1, cap), row),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, cap), row),
+            pl.BlockSpec((1, cap), row),
+            pl.BlockSpec((1, part_len), row),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_parts, cap), jnp.uint32),
+            jax.ShapeDtypeStruct((n_parts, cap), jnp.uint32),
+            jax.ShapeDtypeStruct((n_parts, part_len), jnp.uint32),
+            jax.ShapeDtypeStruct((n_parts, 1), jnp.uint32),
+        ],
+        input_output_aliases={3: 0, 4: 1},
+        interpret=interpret,
+    )(keys_hi, keys_lo, valid.astype(jnp.uint32), table_hi, table_lo)
+    thi, tlo, is_new, ovf = out
+    return thi, tlo, is_new != 0, (ovf[:, 0] != 0)

@@ -1,0 +1,55 @@
+"""Pallas kernel: fused 64-bit triple-key mixing.
+
+Elementwise VPU work: W int32 word-lanes are folded into a (hi, lo) uint32
+pair per element (the PTT key).  Fusing the W-word mix into one kernel makes
+a single HBM pass over the operand block instead of XLA's per-op traffic.
+
+Grid: 1-D over element blocks.  Block shape (W, block_n) in VMEM; the word
+count W is static so the fold is fully unrolled inside the kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import hashing
+
+BLOCK_N = 4096
+
+
+def _kernel(words_ref, hi_ref, lo_ref, *, n_words: int, salt: int):
+    w = words_ref[...]  # (W, block)
+    hi, lo = hashing.mix64([w[i] for i in range(n_words)], salt=salt)
+    hi_ref[...] = hi
+    lo_ref[...] = lo
+
+
+def hash_mix(
+    words: jnp.ndarray, salt: int = 0, block_n: int = BLOCK_N, interpret: bool = True
+):
+    """words: int32/uint32[W, n] -> (hi, lo) uint32[n].
+
+    ``interpret=True`` runs the kernel body on CPU (this container); pass
+    False on a real TPU.
+    """
+    n_words, n = words.shape
+    pad = (-n) % block_n
+    wp = jnp.pad(words, ((0, 0), (0, pad)))
+    grid = (wp.shape[1] // block_n,)
+    hi, lo = pl.pallas_call(
+        lambda wr, hr, lr: _kernel(wr, hr, lr, n_words=n_words, salt=salt),
+        grid=grid,
+        in_specs=[pl.BlockSpec((n_words, block_n), lambda i: (0, i))],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((wp.shape[1],), jnp.uint32),
+            jax.ShapeDtypeStruct((wp.shape[1],), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(wp.astype(jnp.uint32))
+    return hi[:n], lo[:n]

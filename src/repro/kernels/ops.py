@@ -1,0 +1,132 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``radix_dedup_insert`` is the production entry point for the PTT insert: it
+owns the radix partitioning (keys -> partition of their hash, so duplicates
+always meet in the same VMEM-resident table slice), invokes the bucket_dedup
+kernel, and un-permutes the verdicts back to the caller's layout.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+from repro.core.hashing import EMPTY
+from repro.kernels import bucket_dedup as _bucket
+from repro.kernels import hash_mix as _mix
+from repro.kernels import nested_join as _join
+
+PART_SLACK = 4
+
+
+class RadixTable(NamedTuple):
+    """PTT physically laid out as (n_parts, cap_per_part) radix slices."""
+
+    hi: jnp.ndarray
+    lo: jnp.ndarray
+
+    @property
+    def n_parts(self) -> int:
+        return self.hi.shape[0]
+
+
+def make_radix_table(capacity_total: int, n_parts: int) -> RadixTable:
+    cap = 1 << max(int(capacity_total / n_parts) - 1, 1).bit_length()
+    return RadixTable(
+        hi=jnp.full((n_parts, cap), EMPTY, jnp.uint32),
+        lo=jnp.full((n_parts, cap), EMPTY, jnp.uint32),
+    )
+
+
+def _partition_of(key_hi: jnp.ndarray, n_parts: int) -> jnp.ndarray:
+    # distinct salt from the hashset slot bits (key_lo) and the distributed
+    # owner bits (0xA5A5A5A5)
+    return (hashing.fmix32(key_hi ^ jnp.uint32(0x51ED270B)) % jnp.uint32(n_parts)).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
+def radix_dedup_insert(
+    table: RadixTable,
+    key_hi: jnp.ndarray,
+    key_lo: jnp.ndarray,
+    valid: jnp.ndarray,
+    interpret: bool = True,
+):
+    """Map-side combine -> partition -> kernel insert -> un-permute.
+
+    Radix partitioning routes every copy of a key to the same partition, so
+    under the paper's high-duplicate workloads a single hot key could
+    overflow its partition.  The combiner (an intra-batch first-occurrence
+    dedup, the shuffle-side analogue of MapReduce map-combine) forwards only
+    one representative per distinct key; partition load is then governed by
+    the *distinct*-key hash distribution, which is uniform.  In-batch
+    duplicates inherit ``is_new=False`` from first-wins semantics directly.
+
+    Returns (table', is_new bool[n], overflow bool[]).
+    """
+    from repro.core import naive as _naive
+
+    n = key_hi.shape[0]
+    n_parts = table.n_parts
+    rep = _naive.sort_dedup_masked(key_hi, key_lo, valid).uniq_mask  # combiner
+    part = _partition_of(key_hi, n_parts)
+    part_len = max(PART_SLACK * ((n + n_parts - 1) // n_parts), 8)
+
+    # bin representative lanes into (n_parts, part_len), overflow detected
+    pv = jnp.where(rep, part, n_parts)
+    order = jnp.argsort(pv, stable=True)
+    sorted_part = pv[order]
+    starts = jnp.searchsorted(sorted_part, jnp.arange(n_parts + 1, dtype=pv.dtype))
+    rank = jnp.arange(n, dtype=jnp.int32) - starts[sorted_part].astype(jnp.int32)
+    ok = (sorted_part < n_parts) & (rank < part_len)
+    dest = jnp.where(ok, sorted_part.astype(jnp.int32) * part_len + rank, -1)
+    bin_ovf = jnp.any((sorted_part < n_parts) & (rank >= part_len))
+
+    send_index = jnp.full((n_parts * part_len,), -1, jnp.int32)
+    send_index = send_index.at[jnp.where(ok, dest, n_parts * part_len)].set(
+        order.astype(jnp.int32), mode="drop"
+    )
+    safe = jnp.clip(send_index, 0, n - 1)
+    khi = jnp.where(send_index >= 0, key_hi[safe], jnp.uint32(EMPTY)).reshape(
+        n_parts, part_len
+    )
+    klo = jnp.where(send_index >= 0, key_lo[safe], jnp.uint32(EMPTY)).reshape(
+        n_parts, part_len
+    )
+    kval = (send_index >= 0).reshape(n_parts, part_len)
+
+    thi, tlo, is_new_p, ovf_p = _bucket.bucket_dedup(
+        khi, klo, kval, table.hi, table.lo, interpret=interpret
+    )
+
+    dest_by_lane = jnp.full((n,), -1, jnp.int32).at[order].set(dest)
+    flat = is_new_p.reshape(-1)
+    safe_d = jnp.clip(dest_by_lane, 0, flat.shape[0] - 1)
+    # only representatives can be new; in-batch duplicates are False by the
+    # combiner's first-wins ordering
+    is_new = jnp.where(dest_by_lane >= 0, flat[safe_d], False) & rep & valid
+    return (
+        RadixTable(hi=thi, lo=tlo),
+        is_new,
+        jnp.any(ovf_p) | bin_ovf,
+    )
+
+
+@partial(jax.jit, static_argnames=("salt", "interpret"))
+def fused_hash_mix(words: jnp.ndarray, salt: int = 0, interpret: bool = True):
+    """words int32[W, n] -> (hi, lo) uint32[n] via the Pallas mixer."""
+    return _mix.hash_mix(words, salt=salt, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("max_matches", "interpret"))
+def blocked_nested_join(
+    parent_keys, parent_subjects, child_keys, max_matches: int, interpret: bool = True
+):
+    """The naive-baseline join at full blocked throughput."""
+    return _join.nested_join(
+        parent_keys, parent_subjects, child_keys, max_matches, interpret=interpret
+    )

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every kernel in this package."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import hashing, hashset, naive
+
+
+def hash_mix_ref(words: list[jnp.ndarray], salt: int = 0):
+    """Oracle for the hash_mix kernel: the reference mixer itself."""
+    return hashing.mix64(words, salt=salt)
+
+
+def bucket_dedup_ref(
+    keys_hi: jnp.ndarray,  # uint32[n_parts, part_len]
+    keys_lo: jnp.ndarray,
+    table_hi: jnp.ndarray,  # uint32[n_parts, cap]
+    table_lo: jnp.ndarray,
+    valid: jnp.ndarray,     # bool[n_parts, part_len]
+):
+    """Per-partition open-addressing insert via the reference HashSet.
+
+    Partitions are independent, so the oracle simply folds the batched
+    insert over the partition axis.
+    """
+    out_hi, out_lo, out_new = [], [], []
+    for p in range(keys_hi.shape[0]):
+        res = hashset.insert_masked(
+            hashset.HashSet(table_hi[p], table_lo[p]),
+            keys_hi[p],
+            keys_lo[p],
+            valid[p],
+        )
+        out_hi.append(res.table.hi)
+        out_lo.append(res.table.lo)
+        out_new.append(res.is_new)
+    return (
+        jnp.stack(out_hi),
+        jnp.stack(out_lo),
+        jnp.stack(out_new),
+    )
+
+
+def nested_join_ref(
+    parent_keys: jnp.ndarray,
+    parent_subjects: jnp.ndarray,
+    child_keys: jnp.ndarray,
+    max_matches: int,
+):
+    """Oracle for the blocked nested-loop join kernel."""
+    r = naive.nested_loop_join(parent_keys, parent_subjects, child_keys, max_matches)
+    return r.subjects, r.valid

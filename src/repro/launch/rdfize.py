@@ -1,0 +1,53 @@
+"""Knowledge-graph creation driver — the SDM-RDFizer CLI.
+
+    PYTHONPATH=src python -m repro.launch.rdfize \
+        --mapping mappings.ttl --data-root data/ --out kg.nt \
+        [--engine optimized|naive] [--join sorted|hash]
+
+Mirrors the paper's tool: parse the RML document, plan, execute with the
+PTT/PJTT operators, emit N-Triples, print the per-predicate φ statistics.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mapping", required=True)
+    ap.add_argument("--data-root", default=".")
+    ap.add_argument("--out", default=None, help="N-Triples output path")
+    ap.add_argument("--engine", default="optimized", choices=("optimized", "naive"))
+    ap.add_argument("--join", default="sorted", choices=("sorted", "hash"))
+    ap.add_argument("--batch-size", type=int, default=1 << 16)
+    args = ap.parse_args()
+
+    from repro.core.executor import create_kg
+    from repro.rml import parser
+
+    doc = parser.parse_file(args.mapping)
+    print(f"[rdfize] {len(doc.triples_maps)} triples maps from {args.mapping}")
+    result = create_kg(
+        doc,
+        data_root=args.data_root,
+        engine=args.engine,
+        join_strategy=args.join,
+        batch_size=args.batch_size,
+    )
+    print(f"[rdfize] {result.n_triples} unique triples in "
+          f"{result.wall_time_s:.2f}s ({args.engine} engine)")
+    for pred, st in result.stats.items():
+        print(
+            f"  {st.kind:5s} {pred.rsplit('/', 1)[-1]:30s} "
+            f"|N_p|={st.n_candidates:>9d} |S_p|={st.n_unique:>9d} "
+            f"phi={int(st.phi_optimized()):>12d} "
+            f"phi_naive={int(st.phi_naive()):>14d}"
+        )
+    if args.out:
+        n = result.write_ntriples(args.out)
+        print(f"[rdfize] wrote {n} triples to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Serving driver: batched decode with a KV cache (smoke-scale).
+
+Demonstrates the full decode path on local devices: prefill the cache from
+prompts, then step the batched decode loop; reports tokens/s.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
+        --batch 4 --prompt-len 32 --gen 64
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=64)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import registry
+    from repro.models import transformer
+
+    entry = registry.get_arch(args.arch)
+    if entry.family != "lm":
+        raise SystemExit(f"{args.arch} is not an LM")
+    cfg = entry.smoke_config()
+    print(f"[serve] {cfg.name} smoke ({cfg.param_count()/1e6:.2f}M params), "
+          f"window={cfg.window}")
+
+    key = jax.random.PRNGKey(0)
+    params = transformer.init(key, cfg)
+    max_len = args.prompt_len + args.gen
+    cache = transformer.make_cache(cfg, args.batch, max_len)
+
+    decode = jax.jit(
+        lambda p, c, t, pos: transformer.decode_step(cfg, p, c, t, pos),
+        donate_argnums=(1,),
+    )
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, size=(args.batch, args.prompt_len))
+
+    # prefill by stepping the decode cache (smoke scale; production prefill
+    # lowers the chunked forward — see the prefill_32k dry-run cells)
+    t0 = time.perf_counter()
+    logits = None
+    for i in range(args.prompt_len):
+        logits, cache = decode(
+            params, cache, jnp.asarray(prompts[:, i: i + 1]), jnp.int32(i)
+        )
+    t_prefill = time.perf_counter() - t0
+
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    out_tokens = [np.asarray(tok)]
+    t0 = time.perf_counter()
+    for i in range(args.gen - 1):
+        logits, cache = decode(
+            params, cache, tok, jnp.int32(args.prompt_len + i)
+        )
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out_tokens.append(np.asarray(tok))
+    dt = time.perf_counter() - t0
+    total = args.batch * (args.gen - 1)
+    print(f"[serve] prefill {args.prompt_len} steps in {t_prefill:.2f}s; "
+          f"decode {total} tokens in {dt:.2f}s = {total/dt:.1f} tok/s")
+    gen = np.concatenate(out_tokens, axis=1)
+    print(f"[serve] sample generation (ids): {gen[0][:16].tolist()} ...")
+
+
+if __name__ == "__main__":
+    main()

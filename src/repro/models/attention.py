@@ -1,0 +1,200 @@
+"""Attention: GQA / MQA, RoPE, sliding windows, KV-cache decode.
+
+Covers the five assigned LM archs: qwen2.5 (GQA kv=2 + QKV bias), gemma
+(MQA kv=1, head_dim 256), command-r-plus (GQA kv=8, no bias), dbrx (GQA
+kv=8), mixtral (GQA kv=8 + sliding-window 4096).
+
+``long_500k`` decode relies on the sliding window: the KV cache is a ring
+buffer of ``window`` slots, so cache memory is O(window), independent of the
+logical position — the sub-quadratic path (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+
+
+class AttnConfig(NamedTuple):
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    window: int | None = None  # sliding-window size; None -> full causal
+    # KV-chunked online-softmax attention (flash-style): never materializes
+    # the (S, T) score matrix.  None -> dense scores (fine for short seqs).
+    chunk: int | None = None
+
+
+def init(key, cfg: AttnConfig, dtype):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "q": layers.dense_init(kq, cfg.d_model, cfg.n_heads * cfg.head_dim, dtype, cfg.qkv_bias),
+        "k": layers.dense_init(kk, cfg.d_model, cfg.n_kv * cfg.head_dim, dtype, cfg.qkv_bias),
+        "v": layers.dense_init(kv, cfg.d_model, cfg.n_kv * cfg.head_dim, dtype, cfg.qkv_bias),
+        "o": layers.dense_init(ko, cfg.n_heads * cfg.head_dim, cfg.d_model, dtype, False),
+    }
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = 1.0 / (theta ** (np.arange(0, half) * 2.0 / d))
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    ang = ang[..., None, :]  # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def _split_heads(x, n, d):
+    return x.reshape(*x.shape[:-1], n, d)
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q (B,S,Hq,D), k/v (B,T,Hkv,D) with GQA head grouping."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    q = q.reshape(b, s, hkv, g, d)
+    logits = jnp.einsum("bshgd,bthd->bhgst", q, k).astype(jnp.float32) * scale
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, v)
+    return out.reshape(b, s, hq, d)
+
+
+def _chunked_sdpa(q, k, v, pos_q, pos_k, window, scale, chunk):
+    """Flash-style attention: lax.scan over KV chunks with the online-softmax
+    (running max / denominator / accumulator) recurrence.  Peak memory is
+    O(S * chunk) per head group instead of O(S * T); the backward pass
+    recomputes per-chunk via jax.checkpoint (the flash backward).
+    """
+    b, s, hq, d = q.shape
+    t = k.shape[1]
+    hkv = k.shape[2]
+    g = hq // hkv
+    q5 = q.reshape(b, s, hkv, g, d)
+
+    pad = (-t) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos_k = jnp.pad(pos_k, ((0, 0), (0, pad)), constant_values=-1)
+    nc = k.shape[1] // chunk
+    ks = k.reshape(b, nc, chunk, hkv, d).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, nc, chunk, hkv, d).transpose(1, 0, 2, 3, 4)
+    ps = pos_k.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    neg = jnp.float32(-1e30)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        m, l, acc = carry                       # (b,hkv,g,s) f32 x2, +(...,d)
+        kc, vc, pc = xs
+        logits = (
+            jnp.einsum("bshgd,bchd->bhgsc", q5, kc).astype(jnp.float32) * scale
+        )                                        # (b,hkv,g,s,chunk)
+        valid = (pc[:, None, :] >= 0) & (pc[:, None, :] <= pos_q[:, :, None])
+        if window is not None:
+            valid &= pc[:, None, :] > pos_q[:, :, None] - window
+        valid = valid[:, None, None, :, :]       # (b,1,1,s,chunk)
+        lmax = jnp.max(jnp.where(valid, logits, neg), axis=-1)
+        new_m = jnp.maximum(m, lmax)
+        p = jnp.where(valid, jnp.exp(logits - new_m[..., None]), 0.0)
+        alpha = jnp.exp(m - new_m)
+        new_l = l * alpha + jnp.sum(p, axis=-1)
+        new_acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgsc,bchd->bhgsd", p.astype(vc.dtype), vc
+        ).astype(jnp.float32)
+        return (new_m, new_l, new_acc), None
+
+    m0 = jnp.full((b, hkv, g, s), neg, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, s), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, s, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, ps))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, s, hq, d).astype(q.dtype)
+
+
+def forward(p, cfg: AttnConfig, x, positions):
+    """Full (training / prefill) pass.  Returns (out, (k, v)) so callers can
+    seed a decode cache from the prefill."""
+    b, s, _ = x.shape
+    q = _split_heads(layers.dense(p["q"], x), cfg.n_heads, cfg.head_dim)
+    k = _split_heads(layers.dense(p["k"], x), cfg.n_kv, cfg.head_dim)
+    v = _split_heads(layers.dense(p["v"], x), cfg.n_kv, cfg.head_dim)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    if cfg.chunk is not None and s > cfg.chunk:
+        out = _chunked_sdpa(
+            q, k, v, positions, positions, cfg.window, scale, cfg.chunk
+        )
+    else:
+        ti = positions[:, :, None]  # queries
+        tj = positions[:, None, :]  # keys
+        mask = tj <= ti
+        if cfg.window is not None:
+            mask &= tj > ti - cfg.window
+        out = _sdpa(q, k, v, mask, scale)
+    out = layers.dense(p["o"], out.reshape(b, s, -1))
+    return out, (k, v)
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # (B, T, n_kv, D); T = max_len (full) or window (SWA)
+    v: jnp.ndarray
+    # positions currently stored in each slot, -1 = empty: (B, T)
+    pos: jnp.ndarray
+
+    @classmethod
+    def zeros(cls, batch: int, length: int, cfg: AttnConfig, dtype):
+        return cls(
+            k=jnp.zeros((batch, length, cfg.n_kv, cfg.head_dim), dtype),
+            v=jnp.zeros((batch, length, cfg.n_kv, cfg.head_dim), dtype),
+            pos=jnp.full((batch, length), -1, jnp.int32),
+        )
+
+
+def decode_step(p, cfg: AttnConfig, cache: KVCache, x, position):
+    """One-token decode.  x: (B, 1, d_model); position: scalar int32 (the
+    logical index of the new token).  The cache slot is ``position`` for full
+    attention and ``position % window`` for sliding-window (ring buffer)."""
+    b = x.shape[0]
+    q = _split_heads(layers.dense(p["q"], x), cfg.n_heads, cfg.head_dim)
+    k = _split_heads(layers.dense(p["k"], x), cfg.n_kv, cfg.head_dim)
+    v = _split_heads(layers.dense(p["v"], x), cfg.n_kv, cfg.head_dim)
+    posb = jnp.broadcast_to(position[None], (b,)) if position.ndim == 0 else position
+    q = rope(q, posb[:, None], cfg.rope_theta)
+    k = rope(k, posb[:, None], cfg.rope_theta)
+
+    slot = posb % cache.k.shape[1] if cfg.window is not None else posb
+    ck = jax.vmap(lambda c, kk, s: jax.lax.dynamic_update_slice_in_dim(c, kk, s, 0))(
+        cache.k, k, slot
+    )
+    cv = jax.vmap(lambda c, vv, s: jax.lax.dynamic_update_slice_in_dim(c, vv, s, 0))(
+        cache.v, v, slot
+    )
+    cpos = jax.vmap(lambda c, s, pp: c.at[s].set(pp))(cache.pos, slot, posb)
+
+    # attend over every filled slot that is causally visible
+    visible = (cpos >= 0) & (cpos <= posb[:, None])
+    if cfg.window is not None:
+        visible &= cpos > (posb[:, None] - cfg.window)
+    mask = visible[:, None, :]  # (B, 1, T)
+    out = _sdpa(q, ck, cv, mask, 1.0 / np.sqrt(cfg.head_dim))
+    out = layers.dense(p["o"], out.reshape(b, 1, -1))
+    return out, KVCache(k=ck, v=cv, pos=cpos)

@@ -1,0 +1,141 @@
+"""Shared GNN substrate: graph batches, segment ops, message passing.
+
+JAX has no sparse message-passing primitive (BCOO only) — per the
+assignment, SpMM/SDDMM-style aggregation is implemented with
+``jax.ops.segment_sum``/``segment_max`` over an edge-index scatter.  This
+module IS that part of the system.
+
+Static-shape convention: graphs are padded to fixed (N, E); padded edges
+carry ``edge_mask=False`` (src/dst clipped into range) and every aggregation
+masks them out explicitly.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+from repro.models.sharding import active_axes, constrain
+
+
+def shard_channels(x: jnp.ndarray):
+    """Constrain the feature axis of a node/edge tensor to the 'model' axis
+    (channel sharding for full-batch-large graphs).  The leading (node/edge)
+    axis stays UNCONSTRAINED so edge tensors keep their dp sharding.  No-op
+    without a mesh."""
+    if "model" not in active_axes():
+        return x
+    U = P.UNCONSTRAINED
+    spec = [U] * (x.ndim - 1) + ["model"]
+    if x.ndim == 3:  # irreps tensors (N/E, C, m): channels are axis 1
+        spec = [U, "model", None]
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+class GraphBatch(NamedTuple):
+    node_feat: jnp.ndarray   # (N, F) float
+    positions: jnp.ndarray   # (N, 3) float
+    edge_src: jnp.ndarray    # (E,) int32
+    edge_dst: jnp.ndarray    # (E,) int32
+    node_mask: jnp.ndarray   # (N,) bool
+    edge_mask: jnp.ndarray   # (E,) bool
+    labels: jnp.ndarray      # (N,) int32 node labels | (G,) float targets
+    graph_id: jnp.ndarray    # (N,) int32 graph membership (0 when single)
+    label_mask: jnp.ndarray  # (N,) or (G,) bool — which labels count
+
+    @property
+    def n_nodes(self) -> int:
+        return self.node_feat.shape[0]
+
+    @property
+    def n_edges(self) -> int:
+        return self.edge_src.shape[0]
+
+
+def gather_src(x: jnp.ndarray, batch: GraphBatch) -> jnp.ndarray:
+    return jnp.take(x, batch.edge_src, axis=0)
+
+
+def gather_dst(x: jnp.ndarray, batch: GraphBatch) -> jnp.ndarray:
+    return jnp.take(x, batch.edge_dst, axis=0)
+
+
+def _mask_messages(msgs: jnp.ndarray, batch: GraphBatch) -> jnp.ndarray:
+    m = batch.edge_mask
+    return msgs * m.reshape((-1,) + (1,) * (msgs.ndim - 1)).astype(msgs.dtype)
+
+
+def scatter_sum(msgs: jnp.ndarray, batch: GraphBatch) -> jnp.ndarray:
+    """Aggregate edge messages at their destination (masked)."""
+    return jax.ops.segment_sum(
+        _mask_messages(msgs, batch), batch.edge_dst, num_segments=batch.n_nodes
+    )
+
+
+def scatter_mean(msgs: jnp.ndarray, batch: GraphBatch) -> jnp.ndarray:
+    s = scatter_sum(msgs, batch)
+    deg = jax.ops.segment_sum(
+        batch.edge_mask.astype(msgs.dtype), batch.edge_dst,
+        num_segments=batch.n_nodes,
+    )
+    return s / jnp.maximum(deg, 1.0).reshape((-1,) + (1,) * (msgs.ndim - 1))
+
+
+def edge_softmax(logits: jnp.ndarray, batch: GraphBatch) -> jnp.ndarray:
+    """Softmax over incoming edges per destination node (GAT)."""
+    neg = jnp.asarray(-1e30, logits.dtype)
+    logits = jnp.where(
+        batch.edge_mask.reshape((-1,) + (1,) * (logits.ndim - 1)), logits, neg
+    )
+    mx = jax.ops.segment_max(logits, batch.edge_dst, num_segments=batch.n_nodes)
+    ex = jnp.exp(logits - jnp.take(mx, batch.edge_dst, axis=0))
+    ex = _mask_messages(ex, batch)
+    den = jax.ops.segment_sum(ex, batch.edge_dst, num_segments=batch.n_nodes)
+    return ex / jnp.maximum(jnp.take(den, batch.edge_dst, axis=0), 1e-20)
+
+
+def graph_readout(node_scalars: jnp.ndarray, batch: GraphBatch, n_graphs: int):
+    """Sum-pool node scalars per graph (energy-style readout)."""
+    vals = node_scalars * batch.node_mask.astype(node_scalars.dtype)
+    return jax.ops.segment_sum(vals, batch.graph_id, num_segments=n_graphs)
+
+
+def node_ce_loss(logits: jnp.ndarray, batch: GraphBatch) -> jnp.ndarray:
+    """Masked node-classification cross entropy."""
+    mask = batch.label_mask & batch.node_mask
+    labels = jnp.where(mask, batch.labels, 0)
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[:, None], axis=-1
+    )[:, 0]
+    nll = (logz - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def graph_mse_loss(pred: jnp.ndarray, batch: GraphBatch) -> jnp.ndarray:
+    """Per-graph regression MSE (labels are (G,) targets)."""
+    err = (pred.astype(jnp.float32) - batch.labels.astype(jnp.float32)) ** 2
+    m = batch.label_mask.astype(jnp.float32)
+    return jnp.sum(err * m) / jnp.maximum(jnp.sum(m), 1)
+
+
+def edge_vectors(batch: GraphBatch, eps: float = 1e-9):
+    """(vec, dist, unit) per edge from node positions."""
+    vec = gather_dst(batch.positions, batch) - gather_src(batch.positions, batch)
+    dist = jnp.linalg.norm(vec, axis=-1, keepdims=True)
+    unit = vec / jnp.maximum(dist, eps)
+    return vec, dist[..., 0], unit
+
+
+def bessel_rbf(dist: jnp.ndarray, n_rbf: int, cutoff: float) -> jnp.ndarray:
+    """Sine Bessel radial basis with smooth cosine cutoff (NequIP/DimeNet)."""
+    d = jnp.clip(dist, 1e-6, cutoff)
+    n = jnp.arange(1, n_rbf + 1, dtype=d.dtype)
+    basis = jnp.sqrt(2.0 / cutoff) * jnp.sin(n * jnp.pi * d[..., None] / cutoff) / d[..., None]
+    env = 0.5 * (jnp.cos(jnp.pi * jnp.clip(dist, 0, cutoff) / cutoff) + 1.0)
+    return basis * env[..., None]

@@ -1,0 +1,189 @@
+"""EquiformerV2 (Liao et al., arXiv:2306.12059) — equivariant graph attention
+with eSCN-style SO(2) convolutions.
+
+The eSCN insight (the paper's O(L^6) -> O(L^3) reduction): rotate each edge's
+source features into a frame where the edge direction is z-hat; in that frame
+the SH of the edge direction is nonzero only at m=0, so the full SO(3) tensor
+product collapses to independent per-m SO(2) convolutions, truncated at
+``m_max`` (assigned: l_max=6, m_max=2).  Attention weights come from the
+invariant (m=0) channel; messages are rotated back and aggregated.
+
+Features are stored flattened: (N, C, (l_max+1)^2).  The Wigner rotations use
+``so3.wigner_d_from_rot`` (CG recursion, device-side and differentiable).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.models.gnn import common, so3
+
+
+@dataclasses.dataclass(frozen=True)
+class EquiformerConfig:
+    name: str = "equiformer-v2"
+    n_layers: int = 12
+    channels: int = 128
+    l_max: int = 6
+    m_max: int = 2
+    n_heads: int = 8
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    d_in: int = 16
+    task: str = "graph_reg"  # graph_reg | node_cls
+    n_classes: int = 0
+    channel_shard: bool = False  # constrain channels over the model axis
+    remat: bool = True
+    dtype: Any = jnp.float32
+
+    @property
+    def n_sph(self) -> int:
+        return (self.l_max + 1) ** 2
+
+
+def _m_blocks(cfg: EquiformerConfig):
+    """eSCN m-blocks: for each m in 0..m_max the list of flattened irrep
+    indices (+m and -m components per l >= m)."""
+    blocks = []
+    for m in range(cfg.m_max + 1):
+        plus = [l * l + l + m for l in range(max(m, 0), cfg.l_max + 1) if l >= m]
+        minus = [l * l + l - m for l in range(max(m, 1), cfg.l_max + 1) if l >= m]
+        blocks.append((np.array(plus), np.array(minus)))
+    return blocks
+
+
+def init(key, cfg: EquiformerConfig):
+    C, H = cfg.channels, cfg.n_heads
+    blocks = _m_blocks(cfg)
+    k, key = jax.random.split(key)
+    ps: dict = {"embed": layers.dense_init(k, cfg.d_in, C, cfg.dtype)}
+    for i in range(cfg.n_layers):
+        blk: dict = {}
+        for m, (plus, minus) in enumerate(blocks):
+            nl = len(plus)  # number of l's participating at this m
+            k1, k2, key = jax.random.split(key, 3)
+            # SO(2) conv: mixes channels x l at fixed m; two weight mats for
+            # the (+m, -m) rotation-pair structure
+            blk[f"so2_{m}_r"] = layers.dense_init(k1, C * nl, C * nl, cfg.dtype)
+            if m > 0:
+                blk[f"so2_{m}_i"] = layers.dense_init(k2, C * nl, C * nl, cfg.dtype)
+        k1, k2, k3, k4, key = jax.random.split(key, 5)
+        blk["radial"] = layers.mlp_init(k1, (cfg.n_rbf, C, C), cfg.dtype)
+        blk["attn"] = layers.mlp_init(k2, (2 * C, C, H), cfg.dtype)
+        blk["val_head"] = layers.dense_init(k3, C, C, cfg.dtype)
+        blk["out"] = layers.dense_init(k4, C, C, cfg.dtype)
+        k1, key = jax.random.split(key)
+        blk["ffn"] = {
+            "lin1": layers.dense_init(k1, C, 2 * C, cfg.dtype),
+            "lin2": layers.dense_init(jax.random.split(k1)[0], 2 * C, C, cfg.dtype),
+        }
+        ps[f"layer{i}"] = blk
+    k1, key = jax.random.split(key)
+    out_dim = cfg.n_classes if cfg.task == "node_cls" else 1
+    ps["readout"] = layers.mlp_init(k1, (C, C, out_dim), cfg.dtype)
+    return ps
+
+
+def _so2_conv(p, cfg, x_rot):
+    """x_rot: (E, C, n_sph) in the edge-aligned frame.  Per-m SO(2) conv:
+    (y_+m + i y_-m) = W (x_+m + i x_-m) with W complex -> two real mats."""
+    E = x_rot.shape[0]
+    C = cfg.channels
+    out = jnp.zeros_like(x_rot)
+    for m, (plus, minus) in enumerate(_m_blocks(cfg)):
+        nl = len(plus)
+        xp = x_rot[:, :, plus].reshape(E, C * nl)
+        if m == 0:
+            yp = layers.dense(p["so2_0_r"], xp)
+            out = out.at[:, :, plus].set(yp.reshape(E, C, nl))
+        else:
+            xm = x_rot[:, :, minus].reshape(E, C * nl)
+            wr, wi = p[f"so2_{m}_r"], p[f"so2_{m}_i"]
+            yp = layers.dense(wr, xp) - layers.dense(wi, xm)
+            ym = layers.dense(wi, xp) + layers.dense(wr, xm)
+            out = out.at[:, :, plus].set(yp.reshape(E, C, nl))
+            out = out.at[:, :, minus].set(ym.reshape(E, C, nl))
+    return out  # m > m_max components are zeroed (eSCN truncation)
+
+
+def _rotate(feats, Ds, inverse: bool):
+    """Apply block-diagonal Wigner rotation to (E, C, n_sph)."""
+    outs = []
+    for l, D in enumerate(Ds):
+        sl = feats[:, :, l * l:(l + 1) * (l + 1)]
+        eq = "eab,ecb->eca" if inverse else "eba,ecb->eca"
+        outs.append(jnp.einsum(eq, D, sl))
+    return jnp.concatenate(outs, axis=-1)
+
+
+def forward(params, cfg: EquiformerConfig, batch: common.GraphBatch, n_graphs: int = 1):
+    C, H = cfg.channels, cfg.n_heads
+    n = batch.n_nodes
+    x = jnp.zeros((n, C, cfg.n_sph), cfg.dtype)
+    x = x.at[:, :, 0].set(layers.dense(params["embed"], batch.node_feat.astype(cfg.dtype)))
+
+    _, dist, unit = common.edge_vectors(batch)
+    rbf = common.bessel_rbf(dist, cfg.n_rbf, cfg.cutoff).astype(cfg.dtype)
+    R = so3.rot_to_align_z(unit.astype(jnp.float32))
+    Ds = [d.astype(cfg.dtype) for d in so3.wigner_d_from_rot(cfg.l_max, R)]
+
+    def layer(p, x):
+        src = common.gather_src(x, batch)             # (E, C, n_sph)
+        if cfg.channel_shard:
+            src = common.shard_channels(src)
+        rot = _rotate(src, Ds, inverse=False)         # edge frame
+        if cfg.channel_shard:
+            rot = common.shard_channels(rot)
+        conv = _so2_conv(p, cfg, rot)
+        if cfg.channel_shard:
+            conv = common.shard_channels(conv)
+        radial = layers.mlp(p["radial"], rbf)         # (E, C)
+        conv = conv * radial[..., None]
+
+        # attention from invariants (m=0 of conv + dst scalars)
+        inv = conv[:, :, 0]                           # (E, C)
+        dst_scal = common.gather_dst(x[:, :, 0], batch)
+        logits = layers.mlp(p["attn"], jnp.concatenate([inv, dst_scal], -1))
+        alpha = common.edge_softmax(logits, batch)    # (E, H)
+        # head-structured value weighting
+        vals = layers.dense(p["val_head"], conv.transpose(0, 2, 1)).transpose(0, 2, 1)
+        vals = vals.reshape(vals.shape[0], H, C // H, cfg.n_sph)
+        vals = vals * alpha[:, :, None, None].astype(vals.dtype)
+        msg = vals.reshape(vals.shape[0], C, cfg.n_sph)
+        msg = _rotate(msg, Ds, inverse=True)          # back to global frame
+        if cfg.channel_shard:
+            msg = common.shard_channels(msg)
+        agg = common.scatter_sum(msg, batch)
+        x = x + jnp.einsum("ncm,cd->ndm", agg, p["out"]["w"])
+
+        # equivariant FFN: per-l linear with scalar-gated nonlinearity
+        h = jnp.einsum("ncm,cd->ndm", x, p["ffn"]["lin1"]["w"])
+        gate = jax.nn.silu(h[:, :, 0])[..., None]
+        h = h * gate
+        x = x + jnp.einsum("ncm,cd->ndm", h, p["ffn"]["lin2"]["w"])
+        if cfg.channel_shard:
+            x = common.shard_channels(x)
+        return x
+
+    if cfg.remat:
+        layer = jax.checkpoint(layer)
+    for i in range(cfg.n_layers):
+        x = layer(params[f"layer{i}"], x)
+
+    out = layers.mlp(params["readout"], x[:, :, 0])
+    if cfg.task == "node_cls":
+        return out
+    return common.graph_readout(out[:, 0], batch, n_graphs)
+
+
+def loss_fn(params, cfg: EquiformerConfig, batch, n_graphs: int = 1):
+    out = forward(params, cfg, batch, n_graphs)
+    if cfg.task == "node_cls":
+        return common.node_ce_loss(out, batch)
+    return common.graph_mse_loss(out, batch)

@@ -1,0 +1,140 @@
+"""NequIP (Batzner et al., arXiv:2101.03164) — E(3)-equivariant interatomic
+potential via Clebsch-Gordan tensor products.
+
+Assigned config: 5 interaction layers, 32 channels, l_max=2, 8 Bessel RBFs,
+cutoff 5 Å.  Node features are a dict of irreps ``l -> (N, C, 2l+1)``.  Each
+interaction: message = sum over CG paths (l_in (x) l_sh -> l_out) of
+``w_path(r_ij) * W[l_in, l_sh, l_out] f_src Y(r_hat)``, aggregated with
+segment_sum, followed by per-l self-interaction linear layers and a gated
+nonlinearity (scalars gate the l>0 irreps).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.gnn import common, so3
+
+
+@dataclasses.dataclass(frozen=True)
+class NequIPConfig:
+    name: str = "nequip"
+    n_layers: int = 5
+    channels: int = 32
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    d_in: int = 16           # raw node feature width (species embedding etc.)
+    task: str = "graph_reg"  # graph_reg | node_cls
+    n_classes: int = 0
+    remat: bool = True
+    channel_shard: bool = False
+    dtype: Any = jnp.float32
+
+    @property
+    def paths(self):
+        out = []
+        for l1 in range(self.l_max + 1):
+            for l2 in range(self.l_max + 1):
+                for l3 in range(self.l_max + 1):
+                    if abs(l1 - l2) <= l3 <= l1 + l2:
+                        out.append((l1, l2, l3))
+        return out
+
+
+def init(key, cfg: NequIPConfig):
+    C = cfg.channels
+    k_embed, key = jax.random.split(key)
+    ps: dict = {"embed": layers.dense_init(k_embed, cfg.d_in, C, cfg.dtype)}
+    for i in range(cfg.n_layers):
+        blk: dict = {}
+        for (l1, l2, l3) in cfg.paths:
+            k1, key = jax.random.split(key)
+            # radial MLP: rbf -> C path weights (per channel)
+            blk[f"radial_{l1}_{l2}_{l3}"] = layers.mlp_init(
+                k1, (cfg.n_rbf, 16, C), cfg.dtype
+            )
+        for l in range(cfg.l_max + 1):
+            k1, k2, key = jax.random.split(key, 3)
+            blk[f"self_{l}"] = layers.dense_init(k1, C, C, cfg.dtype)
+            blk[f"out_{l}"] = layers.dense_init(k2, C, C, cfg.dtype)
+        k1, key = jax.random.split(key)
+        blk["gate"] = layers.dense_init(k1, C, C * cfg.l_max, cfg.dtype)
+        ps[f"layer{i}"] = blk
+    k1, k2, key = jax.random.split(key, 3)
+    out_dim = cfg.n_classes if cfg.task == "node_cls" else 1
+    ps["readout"] = layers.mlp_init(k1, (C, 16, out_dim), cfg.dtype)
+    return ps
+
+
+def _apply_lin(p, feat):
+    """Per-l linear over the channel axis: (N, C, M) -> (N, C', M)."""
+    return jnp.einsum("ncm,cd->ndm", feat, p["w"])
+
+
+def forward(params, cfg: NequIPConfig, batch: common.GraphBatch, n_graphs: int = 1):
+    C = cfg.channels
+    n = batch.n_nodes
+    # initial irreps: scalars from node features; higher l start at zero
+    feats = {
+        0: layers.dense(params["embed"], batch.node_feat.astype(cfg.dtype))[..., None]
+    }
+    for l in range(1, cfg.l_max + 1):
+        feats[l] = jnp.zeros((n, C, 2 * l + 1), cfg.dtype)
+
+    _, dist, unit = common.edge_vectors(batch)
+    sh = so3.sph_harm(cfg.l_max, unit).astype(cfg.dtype)  # (E, (L+1)^2)
+    rbf = common.bessel_rbf(dist, cfg.n_rbf, cfg.cutoff).astype(cfg.dtype)
+
+    def layer(p, feats):
+        msgs = {l: 0.0 for l in range(cfg.l_max + 1)}
+        src = {l: common.gather_src(feats[l], batch) for l in feats}
+        for (l1, l2, l3) in cfg.paths:
+            w = layers.mlp(p[f"radial_{l1}_{l2}_{l3}"], rbf)       # (E, C)
+            cg = jnp.asarray(so3.real_cg(l1, l2, l3), cfg.dtype)    # (m1, m2, m3)
+            y = sh[:, l2 * l2:(l2 + 1) * (l2 + 1)]                  # (E, m2)
+            m = jnp.einsum("eca,eb,abd->ecd", src[l1], y, cg)
+            if cfg.channel_shard:
+                m = common.shard_channels(m)
+            msgs[l3] = msgs[l3] + m * w[..., None]
+        agg = {
+            l: common.scatter_sum(jnp.asarray(msgs[l]), batch) for l in msgs
+        }
+        new = {}
+        for l in range(cfg.l_max + 1):
+            new[l] = _apply_lin(p[f"self_{l}"], feats[l]) + _apply_lin(
+                p[f"out_{l}"], agg[l]
+            )
+            if cfg.channel_shard:
+                new[l] = common.shard_channels(new[l])
+        # gated nonlinearity: scalars -> silu; l>0 scaled by sigmoid gates
+        scal = new[0][..., 0]
+        gates = jax.nn.sigmoid(layers.dense(p["gate"], scal))       # (N, C*l_max)
+        out_feats = {0: jax.nn.silu(scal)[..., None]}
+        for l in range(1, cfg.l_max + 1):
+            g = gates[:, (l - 1) * C: l * C]
+            out_feats[l] = new[l] * g[..., None]
+        if cfg.channel_shard:
+            out_feats = {l: common.shard_channels(f) for l, f in out_feats.items()}
+        return out_feats
+
+    if cfg.remat:
+        layer = jax.checkpoint(layer)
+    for i in range(cfg.n_layers):
+        feats = layer(params[f"layer{i}"], feats)
+    out = layers.mlp(params["readout"], feats[0][..., 0])
+    if cfg.task == "node_cls":
+        return out  # (N, n_classes) invariant node logits
+    return common.graph_readout(out[:, 0], batch, n_graphs)
+
+
+def loss_fn(params, cfg: NequIPConfig, batch, n_graphs: int = 1):
+    out = forward(params, cfg, batch, n_graphs)
+    if cfg.task == "node_cls":
+        return common.node_ce_loss(out, batch)
+    return common.graph_mse_loss(out, batch)

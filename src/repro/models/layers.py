@@ -1,0 +1,102 @@
+"""Shared neural-net layers: pure-pytree params + apply functions.
+
+No flax/haiku dependency: params are nested dicts of jnp arrays, created by
+``init_*`` functions and consumed by ``apply``-style functions.  This keeps
+``jax.eval_shape`` trivially usable for allocation-free dry-runs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False):
+    scale = 1.0 / np.sqrt(d_in)
+    p = {"w": jax.random.uniform(key, (d_in, d_out), dtype, -scale, scale)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(dim: int, dtype):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * p["scale"]
+
+
+def layernorm_init(dim: int, dtype):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * p["scale"] + p["bias"]
+
+
+def embedding_init(key, vocab: int, dim: int, dtype):
+    return {"table": jax.random.normal(key, (vocab, dim), dtype) * 0.02}
+
+
+def embed(p, ids):
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def mlp_init(key, dims: tuple[int, ...], dtype, bias: bool = True):
+    """Plain ReLU MLP: dims = (in, h1, ..., out)."""
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        f"fc{i}": dense_init(keys[i], dims[i], dims[i + 1], dtype, bias=bias)
+        for i in range(len(dims) - 1)
+    }
+
+
+def mlp(p, x, act=jax.nn.relu, final_act: bool = False):
+    n = len(p)
+    for i in range(n):
+        x = dense(p[f"fc{i}"], x)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def glu_init(key, d_model: int, d_ff: int, dtype):
+    """Gated linear unit block (SwiGLU/GeGLU share the structure)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "up": dense_init(k1, d_model, d_ff, dtype),
+        "gate": dense_init(k2, d_model, d_ff, dtype),
+        "down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def glu(p, x, act=jax.nn.silu):
+    return dense(p["down"], act(dense(p["gate"], x)) * dense(p["up"], x))
+
+
+def cross_entropy_loss(logits, labels, ignore_index: int = -100):
+    """Token-level mean CE; logits (..., V) fp32-accumulated."""
+    logits = logits.astype(jnp.float32)
+    mask = labels != ignore_index
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)

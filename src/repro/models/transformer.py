@@ -1,0 +1,418 @@
+"""Transformer LM family: dense + MoE, GQA/MQA, SWA, GeGLU/SwiGLU, RoPE.
+
+One parametric implementation covers the five assigned LM architectures.
+Layers are stacked (leading L axis per parameter leaf) and executed with
+``lax.scan`` + per-layer ``jax.checkpoint`` (remat), so compile time and
+activation memory are O(1) in depth.
+
+Sharding (DESIGN.md §4): Megatron TP on the ``model`` axis (QKV/up column-
+parallel, O/down row-parallel, vocab-parallel embedding, expert-parallel
+MoE), batch on (``pod``, ``data``), optional sequence parallelism on the
+residual stream.  ``param_specs``/``act_spec`` centralize the rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention, layers, moe, vocab_parallel
+from repro.models.sharding import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    # variants
+    qkv_bias: bool = False
+    gated_act: str = "silu"          # silu -> SwiGLU, gelu -> GeGLU
+    window: int | None = None        # sliding-window attention (mixtral)
+    tie_embeddings: bool = False     # gemma
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    rope_theta: float = 10000.0
+    norm: str = "rmsnorm"
+    # execution
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    sequence_parallel: bool = True
+    scan_layers: bool = True
+    attn_chunk: int | None = 1024   # flash-style KV chunking (None = dense)
+    microbatches: int = 1           # grad-accum splits for the train step
+    moe_quant_gather: bool = False  # int8 FSDP gathers (§Perf hillclimb)
+
+    @property
+    def attn(self) -> attention.AttnConfig:
+        return attention.AttnConfig(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            n_kv=self.n_kv,
+            head_dim=self.head_dim,
+            rope_theta=self.rope_theta,
+            qkv_bias=self.qkv_bias,
+            window=self.window,
+            chunk=self.attn_chunk,
+        )
+
+    @property
+    def moe_cfg(self) -> moe.MoEConfig:
+        return moe.MoEConfig(
+            d_model=self.d_model,
+            d_ff=self.d_ff,
+            n_experts=self.n_experts,
+            top_k=self.top_k,
+            quantized_gather=self.moe_quant_gather,
+        )
+
+    def param_count(self) -> int:
+        d, f, V, L = self.d_model, self.d_ff, self.vocab, self.n_layers
+        attn = d * (self.n_heads + 2 * self.n_kv) * self.head_dim + (
+            self.n_heads * self.head_dim
+        ) * d
+        if self.moe:
+            ffn = 3 * d * f * self.n_experts + d * self.n_experts
+        else:
+            ffn = 3 * d * f
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        return L * (attn + ffn + 2 * d) + emb + d
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE counts top_k experts)."""
+        if not self.moe:
+            return self.param_count()
+        d, f, L = self.d_model, self.d_ff, self.n_layers
+        dense = self.param_count() - L * 3 * d * f * self.n_experts
+        return dense + L * 3 * d * f * self.top_k
+
+
+# ------------------------------------------------------------------ params
+
+
+def _norm_init(cfg, dtype):
+    return (
+        layers.rmsnorm_init(cfg.d_model, dtype)
+        if cfg.norm == "rmsnorm"
+        else layers.layernorm_init(cfg.d_model, dtype)
+    )
+
+
+def _norm(cfg, p, x):
+    return layers.rmsnorm(p, x) if cfg.norm == "rmsnorm" else layers.layernorm(p, x)
+
+
+def init_layer(key, cfg: LMConfig):
+    ka, kf = jax.random.split(key)
+    p = {
+        "ln1": _norm_init(cfg, cfg.dtype),
+        "attn": attention.init(ka, cfg.attn, cfg.dtype),
+        "ln2": _norm_init(cfg, cfg.dtype),
+    }
+    if cfg.moe:
+        p["moe"] = moe.init(kf, cfg.moe_cfg, cfg.dtype)
+    else:
+        p["ffn"] = layers.glu_init(kf, cfg.d_model, cfg.d_ff, cfg.dtype)
+    return p
+
+
+def init(key, cfg: LMConfig):
+    ke, kl, ko = jax.random.split(key, 3)
+    lkeys = jax.random.split(kl, cfg.n_layers)
+    if cfg.scan_layers:
+        blocks = jax.vmap(lambda k: init_layer(k, cfg))(lkeys)
+    else:
+        blocks = [init_layer(k, cfg) for k in lkeys]
+    p = {
+        "embed": layers.embedding_init(ke, cfg.vocab, cfg.d_model, cfg.dtype),
+        "blocks": blocks,
+        "ln_f": _norm_init(cfg, cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = layers.dense_init(ko, cfg.d_model, cfg.vocab, cfg.dtype)
+    return p
+
+
+# --------------------------------------------------------------- sharding
+
+
+def param_specs(cfg: LMConfig, serve: bool = False):
+    """PartitionSpec tree matching ``init``.  Layer leaves have a leading L
+    axis when scanned (unsharded).
+
+    Training (default): Megatron TP on 'model' + FSDP over 'data' on the
+    other dim (spreads optimizer state, ZeRO-style) — weights are gathered
+    over 'data' on use.
+
+    ``serve=True`` (dense archs): column/row-parallel over the FLATTENED
+    ('data','model') axis — weights stay fully resident (1/256 each, no
+    optimizer state at serving time) and no per-token FSDP gather happens;
+    the only collectives are tiny activation psums (§Perf hillclimb 2).
+    """
+    lead = (None,) if cfg.scan_layers else ()
+
+    def lp(*spec):  # layer param: prepend the (unsharded) scan axis
+        return P(*(lead + spec))
+
+    if serve and not cfg.moe:
+        flat = ("data", "model")
+        attn_specs = {
+            "q": {"w": lp(None, flat)},
+            "k": {"w": lp(None, flat)},
+            "v": {"w": lp(None, flat)},
+            "o": {"w": lp(flat, None)},
+        }
+        if cfg.qkv_bias:
+            for n in ("q", "k", "v"):
+                attn_specs[n]["b"] = lp(flat)
+        norm_spec = (
+            {"scale": lp(None)}
+            if cfg.norm == "rmsnorm"
+            else {"scale": lp(None), "bias": lp(None)}
+        )
+        block = {
+            "ln1": norm_spec,
+            "attn": attn_specs,
+            "ln2": norm_spec,
+            "ffn": {
+                "up": {"w": lp(None, flat)},
+                "gate": {"w": lp(None, flat)},
+                "down": {"w": lp(flat, None)},
+            },
+        }
+        specs = {
+            "embed": {"table": P("model", "data")},
+            "blocks": block if cfg.scan_layers else [block] * cfg.n_layers,
+            "ln_f": {"scale": P(None)}
+            if cfg.norm == "rmsnorm"
+            else {"scale": P(None), "bias": P(None)},
+        }
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = {"w": P(None, flat)}
+        return specs
+
+    attn_specs = {
+        "q": {"w": lp("data", "model")},
+        "k": {"w": lp("data", "model")},
+        "v": {"w": lp("data", "model")},
+        "o": {"w": lp("model", "data")},
+    }
+    if cfg.qkv_bias:
+        for n in ("q", "k", "v"):
+            attn_specs[n]["b"] = lp("model")
+    norm_spec = (
+        {"scale": lp(None)}
+        if cfg.norm == "rmsnorm"
+        else {"scale": lp(None), "bias": lp(None)}
+    )
+    block = {"ln1": norm_spec, "attn": attn_specs, "ln2": norm_spec}
+    if cfg.moe:
+        # TP inside each expert (experts counts 8/16 do not always divide the
+        # model axis): up/gate column-parallel on d_ff, down row-parallel,
+        # d_model dim FSDP-sharded over data
+        block["moe"] = {
+            "router": {"w": lp(None, None)},
+            "up": lp(None, "data", "model"),
+            "gate": lp(None, "data", "model"),
+            "down": lp(None, "model", "data"),
+        }
+    else:
+        block["ffn"] = {
+            "up": {"w": lp("data", "model")},
+            "gate": {"w": lp("data", "model")},
+            "down": {"w": lp("model", "data")},
+        }
+    if not cfg.scan_layers:
+        blocks = [block] * cfg.n_layers
+    else:
+        blocks = block
+    specs = {
+        "embed": {"table": P("model", "data")},  # vocab_parallel storage layout
+        "blocks": blocks,
+        "ln_f": {"scale": P(None)} if cfg.norm == "rmsnorm" else {"scale": P(None), "bias": P(None)},
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = {"w": P("data", "model")}
+    return specs
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes that shard the batch dim: ('pod','data') or ('data',)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+# ----------------------------------------------------------------- forward
+
+
+def _block_forward(cfg: LMConfig, p, x, positions, dp):
+    # Megatron sequence parallelism: the residual stream lives seq-sharded
+    # on 'model'; activations are all-gathered before the TP matmuls and the
+    # TP outputs return seq-sharded.  The explicit constraints keep GSPMD
+    # from resolving the SP<->TP conflict by gathering WEIGHTS (measured:
+    # full f32 ffn matrices per device without them).
+    if cfg.sequence_parallel:
+        x = constrain(x, P(dp, "model", None))
+    h = _norm(cfg, p["ln1"], x)
+    if cfg.sequence_parallel:
+        h = constrain(h, P(dp, None, None))  # gather seq for attention
+    h, _ = attention.forward(p["attn"], cfg.attn, h, positions)
+    if cfg.sequence_parallel:
+        h = constrain(h, P(dp, "model", None))  # reduce-scatter back
+    x = x + h
+    h = _norm(cfg, p["ln2"], x)
+    if cfg.sequence_parallel:
+        h = constrain(h, P(dp, None, None))
+    if cfg.moe:
+        h, aux = moe.forward(p["moe"], cfg.moe_cfg, h)
+    else:
+        h = layers.glu(
+            p["ffn"],
+            h,
+            act=jax.nn.silu if cfg.gated_act == "silu" else jax.nn.gelu,
+        )
+        aux = jnp.float32(0.0)
+    if cfg.sequence_parallel:
+        h = constrain(h, P(dp, "model", None))
+    return x + h, aux
+
+
+def forward(cfg: LMConfig, params, tokens, dp=("data",)):
+    """tokens (B, S) -> final hidden states (B, S, d)."""
+    b, s = tokens.shape
+    x = vocab_parallel.embed(params["embed"]["table"], tokens)
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    block = lambda p, x: _block_forward(cfg, p, x, positions, dp)
+    if cfg.remat:
+        block = jax.checkpoint(
+            block, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    if cfg.scan_layers:
+        def scan_body(x, lp):
+            y, aux = block(lp, x)
+            return y, aux
+        x, _ = jax.lax.scan(scan_body, x, params["blocks"])
+    else:
+        for lp in params["blocks"]:
+            x, _ = block(lp, x)
+    return _norm(cfg, params["ln_f"], x)
+
+
+def logits_fn(cfg: LMConfig, params, h):
+    if cfg.tie_embeddings:
+        return vocab_parallel.tied_logits(params["embed"]["table"], h)
+    return layers.dense(params["lm_head"], h)
+
+
+def loss_fn(cfg: LMConfig, params, tokens, labels, dp=("data",)):
+    h = forward(cfg, params, tokens, dp)
+    logits = logits_fn(cfg, params, h)
+    logits = constrain(logits, P(dp, None, "model"))
+    return layers.cross_entropy_loss(logits, labels)
+
+
+# ------------------------------------------------------------------ decode
+
+
+def make_cache(cfg: LMConfig, batch: int, max_len: int):
+    """Stacked per-layer KV cache, leading L axis.  SWA archs cap the length
+    at the window (ring buffer) — this makes long_500k decode O(window)."""
+    length = min(max_len, cfg.window) if cfg.window is not None else max_len
+    kv_shape = (cfg.n_layers, batch, length, cfg.n_kv, cfg.head_dim)
+    return attention.KVCache(
+        k=jnp.zeros(kv_shape, cfg.dtype),
+        v=jnp.zeros(kv_shape, cfg.dtype),
+        pos=jnp.full((cfg.n_layers, batch, length), -1, jnp.int32),
+    )
+
+
+def cache_specs(cfg: LMConfig, dp=("data",)):
+    """Sharding of the decode cache: batch over dp, *length* over model.
+
+    KV-head counts (1–8) do not divide the 16-way model axis, and sharding
+    the time axis is the split-KV decode layout anyway: each model shard
+    attends over its slice of history and XLA turns the softmax reduction
+    into the flash-decoding-style partial-max/partial-sum combine."""
+    return attention.KVCache(
+        k=P(None, dp, "model", None, None),
+        v=P(None, dp, "model", None, None),
+        pos=P(None, dp, "model"),
+    )
+
+
+def decode_step(cfg: LMConfig, params, cache, tokens, position, dp=("data",)):
+    """One decode step.  tokens (B, 1); position scalar int32.
+    Returns (logits (B, 1, V), cache')."""
+    b = tokens.shape[0]
+    x = vocab_parallel.embed(params["embed"]["table"], tokens)
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), cfg.dtype)
+
+    def body(x, scan_in):
+        lp, lcache = scan_in
+        h, new_cache = attention.decode_step(
+            lp["attn"], cfg.attn, lcache, _norm(cfg, lp["ln1"], x), position
+        )
+        x = x + h
+        # serve-resident TP (dp=None): pin activations replicated so the
+        # resident column/row-parallel weights never get gathered
+        x = constrain(x, P(dp, None, None))
+        if cfg.moe:
+            h, _ = moe.forward(lp["moe"], cfg.moe_cfg, _norm(cfg, lp["ln2"], x))
+        else:
+            h = layers.glu(
+                lp["ffn"],
+                _norm(cfg, lp["ln2"], x),
+                act=jax.nn.silu if cfg.gated_act == "silu" else jax.nn.gelu,
+            )
+        return x + h, new_cache
+
+    if cfg.scan_layers:
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    else:
+        new_layers = []
+        for i, lp in enumerate(params["blocks"]):
+            x, nc = body(x, (lp, jax.tree.map(lambda t: t[i], cache)))
+            new_layers.append(nc)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *new_layers)
+    h = _norm(cfg, params["ln_f"], x)
+    return logits_fn(cfg, params, h), new_cache
+
+
+def prefill(cfg: LMConfig, params, tokens, dp=("data",), unroll_chunks=False):
+    """Prefill pass: full forward, returns last-position logits (B, 1, V).
+
+    ``microbatches > 1`` processes the request batch in waves (batch-chunked
+    prefill): batch elements are independent, so results are exact and peak
+    activation/MoE-dispatch memory drops by the factor.  ``unroll_chunks``
+    replaces the scan with a Python loop for the dry-run cost variants.
+    """
+    b = tokens.shape[0]
+    mb = cfg.microbatches
+    if mb > 1 and b % mb == 0:
+        tb = tokens.reshape(mb, b // mb, tokens.shape[1])
+
+        def one(t):
+            h = forward(cfg, params, t, dp)
+            return logits_fn(cfg, params, h[:, -1:, :])
+
+        if unroll_chunks:
+            outs = jnp.stack([one(tb[i]) for i in range(mb)])
+        else:
+            _, outs = jax.lax.scan(lambda _, t: (None, one(t)), None, tb)
+        return outs.reshape(b, 1, -1)
+    h = forward(cfg, params, tokens, dp)
+    return logits_fn(cfg, params, h[:, -1:, :])

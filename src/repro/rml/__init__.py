@@ -1,0 +1,9 @@
+from repro.rml.model import (  # noqa: F401
+    JoinCondition,
+    LogicalSource,
+    MappingDocument,
+    PredicateObjectMap,
+    RefObjectMap,
+    TermMap,
+    TriplesMap,
+)

@@ -1,0 +1,75 @@
+"""Sharded AdamW — fp32 moments over arbitrary-dtype (bf16) params.
+
+Moments inherit the parameter PartitionSpecs (plus whatever extra data-axis
+sharding the spec tree carries — that is the ZeRO-1 layout, DESIGN.md §4).
+Pure functions over pytrees; no optax dependency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any  # pytree like params, fp32
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 1e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float | None = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros, v=jax.tree.map(jnp.copy, zeros))
+
+    def state_specs(self, param_specs) -> AdamWState:
+        """PartitionSpec tree for the optimizer state (mirrors params)."""
+        from jax.sharding import PartitionSpec as P
+
+        return AdamWState(
+            step=P(), m=param_specs, v=jax.tree.map(lambda s: s, param_specs)
+        )
+
+    def update(self, grads, state: AdamWState, params):
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.grad_clip is not None:
+            gnorm = jnp.sqrt(
+                sum(jnp.sum(g * g) for g in jax.tree.leaves(g32))
+            )
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-12))
+            g32 = jax.tree.map(lambda g: g * scale, g32)
+        else:
+            gnorm = jnp.float32(0.0)
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        c1 = 1.0 - self.b1 ** t
+        c2 = 1.0 - self.b2 ** t
+
+        new_m = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1) * g, state.m, g32)
+        new_v = jax.tree.map(
+            lambda v, g: self.b2 * v + (1 - self.b2) * g * g, state.v, g32
+        )
+
+        def upd(p, m, v):
+            mhat = m / c1
+            vhat = v / c2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - self.lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, new_m, new_v)
+        return new_params, AdamWState(step=step, m=new_m, v=new_v), gnorm

@@ -1,0 +1,100 @@
+"""Attention invariants: chunked (flash-style) == dense, SWA ring buffer,
+decode == forward, RoPE shift property."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("hq,hkv,window", [(8, 2, None), (8, 8, None), (4, 1, 7), (6, 2, 16)])
+@pytest.mark.parametrize("chunk", [5, 16])
+def test_chunked_matches_dense(hq, hkv, window, chunk):
+    cfg_d = A.AttnConfig(d_model=48, n_heads=hq, n_kv=hkv, head_dim=48 // hq,
+                         window=window, chunk=None)
+    cfg_c = cfg_d._replace(chunk=chunk)
+    p = A.init(KEY, cfg_d, jnp.float32)
+    x = jax.random.normal(KEY, (2, 33, 48))
+    pos = jnp.broadcast_to(jnp.arange(33)[None], (2, 33))
+    o1, _ = A.forward(p, cfg_d, x, pos)
+    o2, _ = A.forward(p, cfg_c, x, pos)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+def test_chunked_gradients_match_dense():
+    cfg_d = A.AttnConfig(d_model=32, n_heads=4, n_kv=2, head_dim=8, chunk=None)
+    cfg_c = cfg_d._replace(chunk=7)
+    p = A.init(KEY, cfg_d, jnp.float32)
+    x = jax.random.normal(KEY, (2, 20, 32))
+    pos = jnp.broadcast_to(jnp.arange(20)[None], (2, 20))
+
+    def loss(p, cfg):
+        o, _ = A.forward(p, cfg, x, pos)
+        return jnp.sum(o ** 2)
+
+    g1 = jax.grad(lambda p: loss(p, cfg_d))(p)
+    g2 = jax.grad(lambda p: loss(p, cfg_c))(p)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-4)
+
+
+def test_swa_ring_buffer_evicts_old_tokens():
+    """Tokens beyond the window must not influence decode output."""
+    cfg = A.AttnConfig(d_model=32, n_heads=4, n_kv=2, head_dim=8, window=4)
+    p = A.init(KEY, cfg, jnp.float32)
+    xs = jax.random.normal(KEY, (1, 12, 32))
+
+    # run A: tokens 0..11 sequentially
+    cache = A.KVCache.zeros(1, 4, cfg, jnp.float32)
+    outs_a = []
+    for i in range(12):
+        o, cache = A.decode_step(p, cfg, cache, xs[:, i:i+1], jnp.int32(i))
+        outs_a.append(o)
+
+    # run B: garbage tokens 0..7, then the SAME tokens 8..11
+    cache = A.KVCache.zeros(1, 4, cfg, jnp.float32)
+    garbage = jax.random.normal(jax.random.PRNGKey(9), (1, 8, 32))
+    for i in range(8):
+        _, cache = A.decode_step(p, cfg, cache, garbage[:, i:i+1], jnp.int32(i))
+    for i in range(8, 12):
+        o, cache = A.decode_step(p, cfg, cache, xs[:, i:i+1], jnp.int32(i))
+    # after 4 (window) same tokens, the states coincide
+    np.testing.assert_allclose(
+        np.asarray(o), np.asarray(outs_a[-1]), atol=1e-5
+    )
+
+
+def test_decode_matches_forward_full_attention():
+    cfg = A.AttnConfig(d_model=32, n_heads=4, n_kv=4, head_dim=8)
+    p = A.init(KEY, cfg, jnp.float32)
+    x = jax.random.normal(KEY, (2, 10, 32))
+    pos = jnp.broadcast_to(jnp.arange(10)[None], (2, 10))
+    full, _ = A.forward(p, cfg, x, pos)
+    cache = A.KVCache.zeros(2, 10, cfg, jnp.float32)
+    outs = []
+    for i in range(10):
+        o, cache = A.decode_step(p, cfg, cache, x[:, i:i+1], jnp.int32(i))
+        outs.append(o)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(outs, 1)), np.asarray(full), atol=2e-5
+    )
+
+
+def test_rope_relative_shift_property():
+    """RoPE: scores depend only on relative positions — shifting all
+    positions by a constant leaves q.k inner products unchanged."""
+    q = jax.random.normal(KEY, (1, 6, 2, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 6, 2, 16))
+    pos = jnp.arange(6)[None, :]
+    def scores(shift):
+        qr = A.rope(q, pos + shift, 10000.0)
+        kr = A.rope(k, pos + shift, 10000.0)
+        return jnp.einsum("bshd,bthd->bhst", qr, kr)
+    s0 = scores(0)
+    s7 = scores(7)
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s7), atol=1e-3)

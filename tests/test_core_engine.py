@@ -1,0 +1,177 @@
+"""Core engine: hash set, PJTT strategies, operators, and the paper's
+operation-count (φ) model."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing, hashset, naive, operators, pjtt, ptt
+
+
+def _keys(vals):
+    return hashing.mix64([jnp.asarray(np.asarray(vals, np.int32))])
+
+
+# ----------------------------------------------------------------- hash set
+
+
+@pytest.mark.parametrize("n,n_distinct,batches", [(100, 10, 1), (5000, 500, 5), (333, 7, 3)])
+def test_hashset_first_wins_semantics(n, n_distinct, batches):
+    rng = np.random.default_rng(n)
+    vals = rng.integers(0, n_distinct, size=n).astype(np.int32)
+    hi, lo = _keys(vals)
+    hi, lo = np.asarray(hi), np.asarray(lo)
+    seen, expected = set(), []
+    for h, l in zip(hi.tolist(), lo.tolist()):
+        expected.append((h, l) not in seen)
+        seen.add((h, l))
+    table = hashset.make(4 * n)
+    got = []
+    split = np.array_split(np.arange(n), batches)
+    for part in split:
+        res = hashset.insert(table, jnp.asarray(hi[part]), jnp.asarray(lo[part]))
+        table = res.table
+        assert not bool(res.overflowed)
+        got.extend(np.asarray(res.is_new).tolist())
+    assert got == expected
+    assert int(hashset.count(table)) == len(seen)
+
+
+def test_hashset_overflow_reported():
+    table = hashset.make(2)  # capacity 2
+    hi, lo = _keys(np.arange(10))
+    res = hashset.insert(table, hi, lo)
+    assert bool(res.overflowed)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 400), k=st.integers(1, 50), seed=st.integers(0, 999))
+def test_hashset_distinct_count_property(n, k, seed):
+    vals = np.random.default_rng(seed).integers(0, k, n).astype(np.int32)
+    hi, lo = _keys(vals)
+    res = hashset.insert(hashset.make(4 * n + 8), hi, lo)
+    assert int(np.asarray(res.is_new).sum()) == len(set(vals.tolist()))
+
+
+# --------------------------------------------------------------------- PJTT
+
+
+@pytest.mark.parametrize("strategy", ["sorted", "hash"])
+@pytest.mark.parametrize("n,m,keys", [(50, 30, 5), (1000, 700, 40), (64, 64, 1)])
+def test_pjtt_matches_python_join(strategy, n, m, keys):
+    rng = np.random.default_rng(n + m)
+    pk = rng.integers(0, keys, n).astype(np.int32)
+    ps = rng.integers(0, 10000, n).astype(np.int32)
+    ck = rng.integers(0, keys + 2, m).astype(np.int32)
+    K = int(np.bincount(pk, minlength=keys).max()) + 1
+
+    if strategy == "sorted":
+        idx = pjtt.build_sorted(jnp.asarray(pk), jnp.asarray(ps))
+        pr = pjtt.probe_sorted(idx, jnp.asarray(ck), K)
+    else:
+        idx = pjtt.build_hash(jnp.asarray(pk), jnp.asarray(ps))
+        pr = pjtt.probe_hash(idx, jnp.asarray(ck), K)
+    assert not bool(pr.truncated)
+
+    from collections import defaultdict
+
+    d = defaultdict(set)
+    for k, s in zip(pk.tolist(), ps.tolist()):
+        d[k].add(s)
+    subs, valid = np.asarray(pr.subjects), np.asarray(pr.valid)
+    for i, k in enumerate(ck.tolist()):
+        assert set(subs[i][valid[i]].tolist()) == d.get(k, set()), i
+
+
+def test_pjtt_set_semantics_masks_duplicate_pairs():
+    # identical (key, subject) pairs collapse (paper: values are a SET)
+    pk = jnp.asarray(np.array([1, 1, 1, 2], np.int32))
+    ps = jnp.asarray(np.array([7, 7, 8, 9], np.int32))
+    idx = pjtt.build_sorted(pk, ps)
+    pr = pjtt.probe_sorted(idx, jnp.asarray(np.array([1], np.int32)), 4)
+    got = np.asarray(pr.subjects)[0][np.asarray(pr.valid)[0]]
+    assert sorted(got.tolist()) == [7, 8]
+
+
+def test_pjtt_truncation_flag():
+    pk = jnp.zeros(8, jnp.int32)
+    ps = jnp.arange(8, dtype=jnp.int32)
+    idx = pjtt.build_sorted(pk, ps)
+    pr = pjtt.probe_sorted(idx, jnp.zeros(1, jnp.int32), 4)
+    assert bool(pr.truncated)
+
+
+# ---------------------------------------------------------------- operators
+
+
+def test_som_vs_naive_identical_triples():
+    rng = np.random.default_rng(0)
+    subj = rng.integers(0, 50, 500).astype(np.int32)
+    obj = rng.integers(0, 20, 500).astype(np.int32)
+    p = operators.StaticTripleParams(subj_tmpl=1, pred_id=2, obj_tmpl=3)
+
+    table = ptt.make(600)
+    r = operators.som(table, jnp.asarray(subj), jnp.asarray(obj), p)
+    n_opt = int(np.asarray(r.is_new).sum())
+
+    keys = operators.naive_som_keys(jnp.asarray(subj), jnp.asarray(obj), p)
+    dd = operators.naive_dedup(keys)
+    assert n_opt == int(dd.n_unique)
+    assert n_opt == len({(s, o) for s, o in zip(subj.tolist(), obj.tolist())})
+
+
+def test_ojm_index_join_vs_nested_loop():
+    rng = np.random.default_rng(1)
+    pk = rng.integers(0, 20, 200).astype(np.int32)
+    psub = rng.integers(0, 500, 200).astype(np.int32)
+    ck = rng.integers(0, 22, 150).astype(np.int32)
+    csub = rng.integers(0, 100, 150).astype(np.int32)
+    K = int(np.bincount(pk).max()) + 1
+    p = operators.StaticTripleParams(subj_tmpl=1, pred_id=2, obj_tmpl=3)
+
+    idx = pjtt.build_sorted(jnp.asarray(pk), jnp.asarray(psub))
+    r = operators.ojm(
+        ptt.make(200 * K), idx, jnp.asarray(csub), jnp.asarray(ck), p, K
+    )
+    n_opt = int(np.asarray(r.is_new & r.valid).sum())
+
+    keys, _, trunc = operators.naive_ojm_keys(
+        jnp.asarray(pk), jnp.asarray(psub), jnp.asarray(csub), jnp.asarray(ck), p, K
+    )
+    assert not bool(trunc)
+    dd = operators.naive_dedup(keys)
+    assert n_opt == int(dd.n_unique)
+
+    # python oracle
+    pairs = set()
+    from collections import defaultdict
+
+    d = defaultdict(set)
+    for k, s in zip(pk.tolist(), psub.tolist()):
+        d[k].add(s)
+    for k, s in zip(ck.tolist(), csub.tolist()):
+        for ps_ in d.get(k, ()):
+            pairs.add((s, ps_))
+    assert n_opt == len(pairs)
+
+
+# ------------------------------------------------------------------ φ model
+
+
+def test_phi_model_matches_paper_formulas():
+    from repro.core.executor import PredicateStats
+
+    st_ = PredicateStats(kind="SOM", n_candidates=1000, n_unique=250)
+    assert st_.phi_optimized() == 1000 + 2 * 250
+    assert st_.phi_naive() == pytest.approx(1000 + 250 + 1000 * np.log2(1000))
+
+    stj = PredicateStats(
+        kind="OJM", n_candidates=4000, n_unique=1000, n_parent=500, n_child=600
+    )
+    assert stj.phi_optimized() == 2 * 500 + 600 + 4000 + 2 * 1000
+    assert stj.phi_naive() == pytest.approx(
+        500 * 600 + 4000 + 1000 + 4000 * np.log2(4000)
+    )
+    # the paper's claim: orders of magnitude fewer operations
+    assert stj.phi_naive() / stj.phi_optimized() > 30

@@ -1,0 +1,86 @@
+"""SO(3) substrate validation: the invariants every equivariant model needs.
+
+* real SH orthonormality on the sphere (Monte Carlo),
+* SH equivariance  Y(Rv) = D(R) Y(v),
+* Wigner-D homomorphism and orthogonality (recursion vs products),
+* CG contraction equivariance  W(D1 x, D2 y) = D3 W(x, y),
+* frame alignment  R(v) v_hat = z_hat.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.models.gnn import so3
+
+
+@pytest.fixture(scope="module")
+def rot():
+    rng = np.random.default_rng(0)
+    return so3._rand_rot(rng), so3._rand_rot(rng), rng
+
+
+def test_sph_harm_orthonormal():
+    rng = np.random.default_rng(1)
+    v = rng.normal(size=(200000, 3))
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    Y = np.asarray(so3.sph_harm(4, jnp.asarray(v, jnp.float32)))
+    G = (Y.T @ Y) / len(v) * 4 * np.pi
+    assert np.abs(G - np.eye(G.shape[0])).max() < 0.06  # MC noise ~1/sqrt(N)
+
+
+def test_sph_harm_equivariance(rot):
+    R, _, rng = rot
+    v = rng.normal(size=(256, 3)).astype(np.float32)
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    Y0 = np.asarray(so3.sph_harm(4, jnp.asarray(v)))
+    YR = np.asarray(so3.sph_harm(4, jnp.asarray((v @ R.T).astype(np.float32))))
+    Ds = [np.asarray(d[0]) for d in so3.wigner_d_from_rot(4, jnp.asarray(R[None], jnp.float32))]
+    for l in range(5):
+        sl = slice(l * l, (l + 1) * (l + 1))
+        assert np.abs(YR[:, sl] - Y0[:, sl] @ Ds[l].T).max() < 2e-3
+
+
+def test_wigner_homomorphism(rot):
+    R1, R2, _ = rot
+    Da = so3.wigner_d_from_rot(6, jnp.asarray((R1 @ R2)[None], jnp.float32))
+    D1 = so3.wigner_d_from_rot(6, jnp.asarray(R1[None], jnp.float32))
+    D2 = so3.wigner_d_from_rot(6, jnp.asarray(R2[None], jnp.float32))
+    for l in range(7):
+        prod = np.asarray(D1[l][0]) @ np.asarray(D2[l][0])
+        assert np.abs(prod - np.asarray(Da[l][0])).max() < 1e-3, l
+        orth = np.asarray(D1[l][0]) @ np.asarray(D1[l][0]).T
+        assert np.abs(orth - np.eye(2 * l + 1)).max() < 1e-3, l
+
+
+@pytest.mark.parametrize(
+    "l1,l2,l3",
+    [(1, 1, 0), (1, 1, 1), (1, 1, 2), (2, 1, 1), (2, 1, 2), (2, 2, 2),
+     (2, 2, 0), (3, 1, 4), (5, 2, 4), (6, 1, 6)],
+)
+def test_cg_contraction_equivariance(l1, l2, l3, rot):
+    R, _, rng = rot
+    W = so3.real_cg(l1, l2, l3)
+    assert np.abs(W).max() > 0
+    lmax = max(l1, l2, l3)
+    Ds = [np.asarray(d[0]) for d in so3.wigner_d_from_rot(lmax, jnp.asarray(R[None], jnp.float32))]
+    x = rng.normal(size=2 * l1 + 1)
+    y = rng.normal(size=2 * l2 + 1)
+    m0 = np.einsum("abc,a,b->c", W, x, y)
+    m1 = np.einsum("abc,a,b->c", W, Ds[l1] @ x, Ds[l2] @ y)
+    assert np.abs(m1 - Ds[l3] @ m0).max() < 1e-3 * max(np.abs(m0).max(), 1.0)
+
+
+def test_cg_triangle_rule():
+    assert np.abs(so3.real_cg(1, 1, 3)).max() == 0
+
+
+def test_rot_to_align_z(rot):
+    _, _, rng = rot
+    v = rng.normal(size=(128, 3)).astype(np.float32)
+    R = np.asarray(so3.rot_to_align_z(jnp.asarray(v)))
+    vhat = v / np.linalg.norm(v, axis=1, keepdims=True)
+    out = np.einsum("nij,nj->ni", R, vhat)
+    assert np.abs(out - np.array([0.0, 0.0, 1.0])).max() < 1e-4
+    # orthonormal frames
+    assert np.abs(R @ np.transpose(R, (0, 2, 1)) - np.eye(3)).max() < 1e-4
