@@ -128,6 +128,53 @@ def bench_dedup_gather() -> None:
         )
 
 
+def bench_stream() -> None:
+    """Streaming vs eager ingestion over the generator's 10K/100K CSV
+    testbeds: rows/s and peak traced allocation (tracemalloc covers numpy
+    buffers; RSS is monotonic per process and useless for per-phase peaks).
+    The streamed path reads + dictionary-encodes block-at-a-time, the eager
+    path materializes the whole table first."""
+    import tempfile
+    import tracemalloc
+
+    from repro.data.encoder import Dictionary
+    from repro.data.sources import load_csv
+    from repro.rml import generator
+    from repro.stream import read_csv
+
+    for n in (10_000, 100_000):
+        tb = generator.make_testbed("SOM", n, 0.75, n_poms=2, seed=0)
+        with tempfile.TemporaryDirectory() as d:
+            tb.write(d)
+            path = os.path.join(d, "child.csv")
+            cols = list(tb.child)
+
+            def eager():
+                dct = Dictionary()
+                table = load_csv(path)
+                for c in cols:
+                    dct.encode(table[c])
+
+            def streamed():
+                dct = Dictionary()
+                ds = read_csv(path, block_rows=1 << 13).encode(dct)
+                for block in ds.iter_blocks():
+                    assert block.n_rows > 0
+
+            for name, fn in (("stream", streamed), ("eager", eager)):
+                tracemalloc.start()
+                t0 = time.perf_counter()
+                fn()
+                dt = time.perf_counter() - t0
+                _, peak = tracemalloc.get_traced_memory()
+                tracemalloc.stop()
+                _row(
+                    f"stream/{name}-{n}",
+                    dt * 1e6,
+                    f"rows_per_s={n / dt:.0f};peak_alloc_mb={peak / 1e6:.1f}",
+                )
+
+
 def bench_roofline() -> None:
     from benchmarks import roofline
 
@@ -150,7 +197,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    choices=(None, "fig56", "opmodel", "kernels", "dedup", "roofline"))
+                    choices=(None, "fig56", "opmodel", "kernels", "dedup",
+                             "stream", "roofline"))
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -159,6 +207,7 @@ def main() -> None:
         "opmodel": bench_op_model,
         "kernels": bench_kernels,
         "dedup": bench_dedup_gather,
+        "stream": bench_stream,
         "roofline": bench_roofline,
     }
     for name, fn in sections.items():

@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the full test suite, bounded by a timeout so a hung
+# jit compile or prefetch thread cannot wedge CI.
+#
+#   scripts/tier1.sh            # defaults: 1800s timeout
+#   TIER1_TIMEOUT=600 scripts/tier1.sh -k stream   # extra args -> pytest
+set -euo pipefail
+cd "$(dirname "$0")/.."
+exec timeout "${TIER1_TIMEOUT:-1800}" \
+    env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m pytest -x -q "$@"

@@ -1,0 +1,58 @@
+"""jax version-compat shims, dependency-neutral (imports only jax).
+
+The repo targets current jax APIs; on older jax (0.4.x, no
+``get_abstract_mesh`` / ``jax.set_mesh`` / ``jax.shard_map`` /
+``AxisType``) these wrappers fall back to the legacy equivalents.  Every
+layer (core, models, launch, tests) should use these instead of touching
+the jax API surface directly.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def current_mesh():
+    """The active mesh: the abstract mesh on new jax, the ``with mesh:``
+    context mesh on jax<=0.4 (no ``get_abstract_mesh``)."""
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        return get()
+    from jax._src import mesh as _mesh_impl
+
+    return _mesh_impl.thread_resources.env.physical_mesh
+
+
+def set_mesh(mesh):
+    """``jax.set_mesh(mesh)`` when available, else the Mesh context manager
+    (both are used as ``with set_mesh(mesh):``)."""
+    setter = getattr(jax, "set_mesh", None)
+    return setter(mesh) if setter is not None else mesh
+
+
+def compat_make_mesh(shape, axes):
+    """``jax.make_mesh`` across jax versions: ``axis_types`` (and
+    ``jax.sharding.AxisType``) only exist on newer jax."""
+    kwargs = (
+        {"axis_types": (jax.sharding.AxisType.Auto,) * len(axes)}
+        if hasattr(jax.sharding, "AxisType")
+        else {}
+    )
+    return jax.make_mesh(shape, axes, **kwargs)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` across jax versions (older jax ships it as
+    ``jax.experimental.shard_map`` with ``check_rep`` for ``check_vma``)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as legacy
+
+    return legacy(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )

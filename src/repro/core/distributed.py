@@ -29,6 +29,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import hashing, hashset, pjtt
 from repro.core.hashing import EMPTY
+from repro.compat import shard_map
 
 # Default slack factor for the fixed-capacity all_to_all bins.  With random
 # hash owners the per-bucket load is Binomial(n_local, 1/S); 4x the mean keeps
@@ -134,7 +135,7 @@ def distributed_insert(mesh, table: ShardedPTT, key_hi, key_lo, valid):
     spec_t = P(axes)
     spec_b = P(axes)
     out = jax.jit(
-        jax.shard_map(
+        shard_map(
             fn,
             mesh=mesh,
             check_vma=False,
@@ -180,7 +181,7 @@ def build_distributed_pjtt(mesh, parent_keys, parent_subjects):
 
     spec_b = P(axes)
     skeys, ssubj, ovf = jax.jit(
-        jax.shard_map(
+        shard_map(
             fn,
             mesh=mesh,
             check_vma=False,
@@ -233,7 +234,7 @@ def distributed_ojm_probe(mesh, index: ShardedPJTT, child_keys, max_matches: int
 
     spec_b = P(axes)
     subs, vals, ovf = jax.jit(
-        jax.shard_map(
+        shard_map(
             fn,
             mesh=mesh,
             check_vma=False,

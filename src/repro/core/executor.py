@@ -184,6 +184,12 @@ class KGResult:
                 n += 1
         return n
 
+    def sorted_ntriples(self) -> list[str]:
+        """Rendered triples in sorted order — the engine-independent identity
+        (dictionary ids differ between eager and streamed runs, rendered
+        strings do not)."""
+        return sorted(self.iter_ntriples())
+
     def as_set(self) -> set[tuple]:
         """Exact triple identity set (for engine-equivalence assertions)."""
         out = set()
@@ -199,6 +205,14 @@ class KGResult:
                     )
                 )
         return out
+
+
+def _sources_by_key(doc: MappingDocument) -> dict:
+    """planner source_key -> LogicalSource (keys match the planned ops)."""
+    return {
+        planner.source_key(tm.source): tm.source
+        for tm in doc.triples_maps.values()
+    }
 
 
 def _render(d: Dictionary, pat_id: int, val_id: int) -> str:
@@ -223,6 +237,10 @@ class EngineConfig:
     batch_size: int = 1 << 16
     load_factor: float = 0.6
     max_matches: int | None = None   # None -> derived from true max span
+    # streaming ingestion (repro.stream): block-at-a-time, out-of-core
+    stream: bool = False
+    block_rows: int = 1 << 14
+    prefetch_blocks: int = 2
 
 
 class Engine:
@@ -249,17 +267,30 @@ class Engine:
         maps source key ('csv:child.csv') -> columnar dict."""
         t0 = time.perf_counter()
         cfg = self.config
+        if cfg.stream:
+            if cfg.engine != "optimized":
+                raise ValueError(
+                    "stream=True supports only the optimized engine "
+                    "(the naive engine materializes everything by design)"
+                )
+            if cfg.block_rows < 1:
+                raise ValueError(f"block_rows must be >= 1, got {cfg.block_rows}")
+            return self._run_stream(doc, data_root, tables, t0)
         exec_plan = planner.plan(doc)
         dct = Dictionary()
         cache = SourceCache(data_root)
+        sources_by_key = _sources_by_key(doc)
 
         def get_table(source_key: str):
             if tables is not None and source_key in tables:
                 return tables[source_key]
-            fmt, path = source_key.split(":", 1)
             from repro.rml.model import LogicalSource
 
-            return cache.get(LogicalSource(path=path, fmt=fmt))
+            src = sources_by_key.get(source_key)
+            if src is None:
+                fmt, path, iterator = planner.parse_source_key(source_key)
+                src = LogicalSource(path=path, fmt=fmt, iterator=iterator)
+            return cache.get(src)
 
         # ---- encode the value columns each op needs (once per column set)
         value_cache: dict[tuple, np.ndarray] = {}
@@ -342,6 +373,59 @@ class Engine:
             engine=cfg.engine,
         )
 
+    # -- shared per-batch step (eager and streamed paths) ----------------------
+
+    def _consume_batch(
+        self, op, spat, pid, opat, hi, lo, batch, index, K, out, st,
+    ):
+        """Push one fixed-shape padded batch through the jitted step for
+        ``op``; appends emitted triples to ``out`` and accumulates ``st``.
+        Returns ``(hi, lo, overflowed)``."""
+        valid = jnp.asarray(batch.valid)
+        sv = jnp.asarray(batch.arrays["subj"])
+        if op.kind == "OJM":
+            ck = jnp.asarray(batch.arrays["jkey"])
+            if isinstance(index, pjtt.PJTTSorted):
+                hi, lo, is_new, psubj, v, ovf, trunc = _ojm_sorted_step(
+                    hi, lo, index.skeys, index.ssubj, spat, sv, pid,
+                    opat, K, ck, valid,
+                )
+            else:
+                hi, lo, is_new, psubj, v, ovf, trunc = _ojm_hash_step(
+                    hi, lo, index.tkey, index.tstart, index.tcount,
+                    index.ssubj, spat, sv, pid, opat, K, ck, valid,
+                )
+            if bool(trunc):
+                raise RuntimeError(
+                    f"PJTT span exceeded max_matches={K}; "
+                    "re-run with a larger max_matches"
+                )
+            is_new_np = np.asarray(is_new)
+            v_np = np.asarray(v)
+            st.n_candidates += int(v_np.sum())
+            emit = is_new_np & v_np
+            rows, ks = np.nonzero(emit)
+            sv_np = np.asarray(batch.arrays["subj"])
+            ps_np = np.asarray(psubj)
+            out["subj_val"].append(sv_np[rows].astype(np.int32))
+            out["obj_val"].append(ps_np[rows, ks].astype(np.int32))
+            n_emit = len(rows)
+        else:
+            ov = jnp.asarray(batch.arrays["obj"])
+            hi, lo, is_new, ovf = _dedup_step(
+                hi, lo, spat, sv, pid, opat, ov, valid
+            )
+            is_new_np = np.asarray(is_new)
+            st.n_candidates += int(batch.valid.sum())
+            rows = np.nonzero(is_new_np & batch.valid)[0]
+            out["subj_val"].append(batch.arrays["subj"][rows].astype(np.int32))
+            out["obj_val"].append(batch.arrays["obj"][rows].astype(np.int32))
+            n_emit = len(rows)
+        out["subj_pat"].append(np.full(n_emit, spat, np.int32))
+        out["obj_pat"].append(np.full(n_emit, opat, np.int32))
+        st.n_unique += n_emit
+        return hi, lo, bool(ovf)
+
     # -- optimized engine ------------------------------------------------------
 
     def _run_optimized(
@@ -376,6 +460,7 @@ class Engine:
 
                     n = len(subj_vals)
                     bs = min(cfg.batch_size, pipeline.pick_batch_size(n))
+                    K = 1
                     if op.kind == "OJM":
                         tot, mx = op_spans[i]
                         K = cfg.max_matches or max(int(mx), 1)
@@ -383,56 +468,12 @@ class Engine:
                             len(values_for(op.parent_source_key, (op.parent_join_column,)))
                         )
                         st.n_child += n
+                    idx = indexes[op.pjtt_key] if op.kind == "OJM" else None
                     for batch in pipeline.batches(cols, bs):
-                        valid = jnp.asarray(batch.valid)
-                        sv = jnp.asarray(batch.arrays["subj"])
-                        if op.kind == "OJM":
-                            idx = indexes[op.pjtt_key]
-                            ck = jnp.asarray(batch.arrays["jkey"])
-                            if isinstance(idx, pjtt.PJTTSorted):
-                                hi, lo, is_new, psubj, v, ovf, trunc = _ojm_sorted_step(
-                                    hi, lo, idx.skeys, idx.ssubj, spat, sv, pid,
-                                    opat, K, ck, valid,
-                                )
-                            else:
-                                hi, lo, is_new, psubj, v, ovf, trunc = _ojm_hash_step(
-                                    hi, lo, idx.tkey, idx.tstart, idx.tcount,
-                                    idx.ssubj, spat, sv, pid, opat, K, ck, valid,
-                                )
-                            if bool(trunc):
-                                raise RuntimeError(
-                                    f"PJTT span exceeded max_matches={K}; "
-                                    "re-run with a larger max_matches"
-                                )
-                            is_new_np = np.asarray(is_new)
-                            v_np = np.asarray(v)
-                            st.n_candidates += int(v_np.sum())
-                            emit = is_new_np & v_np
-                            rows, ks = np.nonzero(emit)
-                            sv_np = np.asarray(batch.arrays["subj"])
-                            ps_np = np.asarray(psubj)
-                            out["subj_val"].append(sv_np[rows].astype(np.int32))
-                            out["obj_val"].append(ps_np[rows, ks].astype(np.int32))
-                            n_emit = len(rows)
-                        else:
-                            ov = jnp.asarray(batch.arrays["obj"])
-                            hi, lo, is_new, ovf = _dedup_step(
-                                hi, lo, spat, sv, pid, opat, ov, valid
-                            )
-                            is_new_np = np.asarray(is_new)
-                            st.n_candidates += int(batch.valid.sum())
-                            rows = np.nonzero(is_new_np & batch.valid)[0]
-                            out["subj_val"].append(
-                                batch.arrays["subj"][rows].astype(np.int32)
-                            )
-                            out["obj_val"].append(
-                                batch.arrays["obj"][rows].astype(np.int32)
-                            )
-                            n_emit = len(rows)
-                        out["subj_pat"].append(np.full(n_emit, spat, np.int32))
-                        out["obj_pat"].append(np.full(n_emit, opat, np.int32))
-                        st.n_unique += n_emit
-                        if bool(ovf):
+                        hi, lo, ovf = self._consume_batch(
+                            op, spat, pid, opat, hi, lo, batch, idx, K, out, st
+                        )
+                        if ovf:
                             overflow = True
                             break
                     if overflow:
@@ -441,6 +482,261 @@ class Engine:
                     triples_out[pred] = out
                     break
                 cap *= 2  # replay this predicate with a bigger table
+
+    # -- streamed optimized engine (repro.stream) ------------------------------
+
+    def _run_stream(self, doc, data_root, tables, t0) -> KGResult:
+        """Out-of-core KG creation.  Every source flows block-at-a-time
+        through a lazy ``read -> project -> derive -> encode -> batch``
+        Dataset; only dictionary-encoded int32 ids (and the PJTT indexes
+        built from them) outlive a block, so host memory is bounded by
+        O(block_rows) per raw column regardless of source size.  Sized like
+        the eager engine (exact span stats, streamed), with the same
+        overflow-replay fallback — a replay re-reads the source rather than
+        re-using a cached table."""
+        import os
+
+        from repro.stream import Dataset, read_source
+        from repro.stream.block import Block
+        from repro.stream.datasource import is_sharded_path
+
+        cfg = self.config
+        exec_plan = planner.plan(doc)
+        dct = Dictionary()
+        block_rows = cfg.block_rows
+        # block_rows bounds I/O granularity; batch_size still bounds the
+        # jitted device batch (a block is split into padded batches if the
+        # user asked for a smaller device shape)
+        device_rows = min(cfg.batch_size, block_rows)
+        prefetch = cfg.prefetch_blocks
+        sources_by_key = _sources_by_key(doc)
+
+        def resolve(source_key: str) -> tuple[str, str, str | None]:
+            """source_key -> (fmt, absolute path, iterator)."""
+            src = sources_by_key.get(source_key)
+            if src is not None:
+                fmt, path, iterator = src.fmt, src.path, src.iterator
+            else:
+                fmt, path, iterator = planner.parse_source_key(source_key)
+            if not os.path.isabs(path):
+                path = os.path.join(data_root, path)
+            return fmt, path, iterator
+
+        def dataset_for(source_key: str) -> Dataset:
+            if tables is not None and source_key in tables:
+                return Dataset.from_table(tables[source_key], block_rows=block_rows)
+            fmt, path, iterator = resolve(source_key)
+            return read_source(
+                path, fmt=fmt, block_rows=block_rows, iterator=iterator
+            )
+
+        def fill_of(source_key: str) -> str | None:
+            """Projection fill policy: "" (union-fill) for genuinely
+            heterogeneous sources — JSON records and glob-sharded files —
+            matching the eager loader's key-union; None (strict KeyError,
+            matching the eager engine's table[c]) for fixed-schema
+            single-file CSV/TSV and the tables bypass, where a missing
+            column is a mapping typo."""
+            if tables is not None and source_key in tables:
+                return None
+            fmt, path, _ = resolve(source_key)
+            if fmt == "json":
+                return ""
+            return "" if is_sharded_path(path) else None
+
+        def derived(block: Block, columns: tuple) -> np.ndarray:
+            """String value column for a (possibly multi-column) term; a
+            constant term is int32 zeros, which Encode passes through."""
+            if not columns:
+                return np.zeros(block.n_rows, dtype=np.int32)
+            return join_columns([block.columns[c] for c in columns])
+
+        def op_dataset(op) -> Dataset:
+            if op.kind == "OJM":
+                extra: tuple = (op.join_child_column,)
+            elif op.kind in ("SOM", "ORM"):
+                extra = tuple(op.obj_columns)
+            else:
+                extra = ()
+            needed = tuple(dict.fromkeys(tuple(op.subj_columns) + extra))
+
+            def to_term_columns(block: Block) -> Block:
+                cols = {"subj": derived(block, op.subj_columns)}
+                if op.kind == "OJM":
+                    cols["jkey"] = block.columns[op.join_child_column]
+                elif op.kind in ("SOM", "ORM"):
+                    cols["obj"] = derived(block, op.obj_columns)
+                else:  # CLASS: constant object
+                    cols["obj"] = np.zeros(block.n_rows, dtype=np.int32)
+                return Block(cols)
+
+            # all-constant ops read no columns; skip the projection entirely
+            # (a zero-column block would lose its row count) and let
+            # to_term_columns derive zeros from the raw block's n_rows
+            ds = dataset_for(op.source_key)
+            if needed:
+                ds = ds.project(*needed, fill=fill_of(op.source_key))
+            return ds.map_blocks(to_term_columns).encode(dct).batch(block_rows)
+
+        # ---- referenced-column validation for union-fill sources: a column
+        # absent from EVERY record is a mapping typo (the eager engine's
+        # table[c] raises on it); fill-mode projection would otherwise
+        # silently emit ""-term triples.  The scan also yields row counts,
+        # sparing these sources the sizing count pass below.
+        refcols: dict[str, set] = {}
+        for op in exec_plan.ops:
+            cols = refcols.setdefault(op.source_key, set())
+            cols.update(op.subj_columns)
+            if op.kind == "OJM":
+                cols.add(op.join_child_column)
+            else:
+                cols.update(op.obj_columns)
+        for psrc_, pcol_, _ppat_, pcols_ in exec_plan.pjtt_builds.values():
+            cols = refcols.setdefault(psrc_, set())
+            cols.add(pcol_)
+            cols.update(pcols_)
+        row_counts: dict[str, int] = {}
+        for skey, cols in refcols.items():
+            if not cols or fill_of(skey) is None:
+                continue
+            seen: set = set()
+            n = 0
+            for block in dataset_for(skey).iter_blocks(prefetch):
+                seen |= set(block.schema)
+                n += block.n_rows
+            row_counts[skey] = n
+            missing = cols - seen
+            if missing:
+                raise KeyError(
+                    f"columns {sorted(missing)} not present in any record of "
+                    f"source {skey!r}"
+                )
+
+        # ---- PJTT builds: stream the parent once; retain only int32 ids
+        indexes: dict[str, tuple] = {}
+        parent_counts: dict[str, int] = {}
+        sorted_parent_keys: dict[str, np.ndarray] = {}
+        for pkey, (psrc, pcol, _ppat, pcols) in exec_plan.pjtt_builds.items():
+            needed = tuple(dict.fromkeys((pcol,) + tuple(pcols)))
+
+            def to_index_columns(block: Block, pcol=pcol, pcols=pcols) -> Block:
+                return Block(
+                    {"key": block.columns[pcol], "subj": derived(block, pcols)}
+                )
+
+            ds = (
+                dataset_for(psrc)
+                .project(*needed, fill=fill_of(psrc))
+                .map_blocks(to_index_columns)
+                .encode(dct)
+            )
+            kchunks, schunks = [], []
+            for block in ds.iter_blocks(prefetch):
+                kchunks.append(block.columns["key"])
+                schunks.append(block.columns["subj"])
+            pkeys = np.concatenate(kchunks) if kchunks else np.zeros(0, np.int32)
+            psubj = np.concatenate(schunks) if schunks else np.zeros(0, np.int32)
+            kd, sd = jnp.asarray(pkeys), jnp.asarray(psubj)
+            if cfg.join_strategy == "hash":
+                indexes[pkey] = _build_hash(kd, sd)
+            else:
+                indexes[pkey] = _build_sorted(kd, sd)
+            parent_counts[pkey] = len(pkeys)
+            sorted_parent_keys[pkey] = np.sort(pkeys)
+            row_counts[psrc] = len(pkeys)
+
+        # ---- sizing pre-pass: exact |N_p| and max span, streamed
+        stats: dict[str, PredicateStats] = {}
+        pred_candidates: dict[str, int] = {}
+        op_spans: dict[int, tuple[int, int]] = {}
+        for pred, op_idxs in exec_plan.by_predicate.items():
+            total = 0
+            stats[pred] = PredicateStats(kind=exec_plan.ops[op_idxs[0]].kind)
+            for i in op_idxs:
+                op = exec_plan.ops[i]
+                if op.kind == "OJM":
+                    spk = sorted_parent_keys[op.pjtt_key]
+                    tot = mx = n = 0
+                    ds = (
+                        dataset_for(op.source_key)
+                        .project(op.join_child_column, fill=fill_of(op.source_key))
+                        .encode(dct)
+                    )
+                    for block in ds.iter_blocks(prefetch):
+                        ck = block.columns[op.join_child_column]
+                        cnt = np.searchsorted(spk, ck, side="right") - \
+                            np.searchsorted(spk, ck, side="left")
+                        if len(cnt):
+                            tot += int(cnt.sum())
+                            mx = max(mx, int(cnt.max()))
+                        n += block.n_rows
+                    row_counts[op.source_key] = n
+                    op_spans[i] = (tot, mx)
+                    total += tot
+                else:
+                    n = row_counts.get(op.source_key)
+                    if n is None:
+                        n = dataset_for(op.source_key).count()
+                        row_counts[op.source_key] = n
+                    op_spans[i] = (n, 1)
+                    total += n
+            pred_candidates[pred] = total
+
+        # ---- run the ops, block-at-a-time
+        triples_out: dict[str, dict[str, list[np.ndarray]]] = {}
+        for pred, op_idxs in exec_plan.by_predicate.items():
+            cap = next_pow2(int(pred_candidates[pred] / cfg.load_factor) + 16)
+            while True:  # overflow -> double capacity, re-stream the predicate
+                table = hashset.make(cap)
+                hi, lo = table.hi, table.lo
+                out = {k: [] for k in ("subj_pat", "subj_val", "obj_pat", "obj_val")}
+                st = stats[pred]
+                st.n_candidates = st.n_unique = st.n_parent = st.n_child = 0
+                overflow = False
+                for i in op_idxs:
+                    op = exec_plan.ops[i]
+                    pid = np.int32(dct.encode_scalar(op.predicate))
+                    spat = np.int32(dct.encode_scalar(op.subj_pattern))
+                    opat = np.int32(dct.encode_scalar(op.obj_pattern))
+                    idx = None
+                    K = 1
+                    if op.kind == "OJM":
+                        idx = indexes[op.pjtt_key]
+                        _tot, mx = op_spans[i]
+                        K = cfg.max_matches or max(int(mx), 1)
+                        st.n_parent += parent_counts[op.pjtt_key]
+                        st.n_child += row_counts[op.source_key]
+                    for block in op_dataset(op).iter_blocks(prefetch):
+                        for batch in pipeline.batches(block.columns, device_rows):
+                            hi, lo, ovf = self._consume_batch(
+                                op, spat, pid, opat, hi, lo, batch, idx, K, out, st
+                            )
+                            if ovf:
+                                overflow = True
+                                break
+                        if overflow:
+                            break
+                    if overflow:
+                        break
+                if not overflow:
+                    triples_out[pred] = out
+                    break
+                cap *= 2
+
+        final = {
+            pred: {
+                k: np.concatenate(v) if v else np.zeros(0, np.int32)
+                for k, v in t.items()
+            }
+            for pred, t in triples_out.items()
+        }
+        return KGResult(
+            dictionary=dct,
+            triples=final,
+            stats=stats,
+            wall_time_s=time.perf_counter() - t0,
+            engine="stream",
+        )
 
     # -- naive engine ----------------------------------------------------------
 

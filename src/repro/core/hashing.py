@@ -66,9 +66,14 @@ def mix64(words, salt: int = 0) -> tuple[jnp.ndarray, jnp.ndarray]:
         w = _u32(w)
         hi = combine32(hi, w)
         lo = combine32(lo, w ^ jnp.uint32(_GOLDEN))
-    # cross-lane avalanche
+    # cross-lane avalanche — sequential (lo2 absorbs the *mixed* hi2) so the
+    # (hi, lo) -> (hi2, lo2) map is a bijection on the full 64-bit state.  A
+    # parallel xor of shifted lanes is NOT: (h ^ (l>>1), l ^ (h<<1)) has a
+    # 2^31-element kernel (any dh with top bit clear and dl == dh<<1), which
+    # collapses the key space to ~33 effective bits and silently drops
+    # triples at the paper's 100K/1M benchmark scale.
     hi2 = fmix32(hi ^ (lo >> 1))
-    lo2 = fmix32(lo ^ (hi << 1) ^ jnp.uint32(1))
+    lo2 = fmix32(lo ^ hi2)
     # keep the sentinel reserved
     is_sent = (hi2 == jnp.uint32(EMPTY)) & (lo2 == jnp.uint32(EMPTY))
     lo2 = jnp.where(is_sent, jnp.uint32(EMPTY - 1), lo2)

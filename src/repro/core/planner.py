@@ -17,7 +17,14 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.rml.model import MappingDocument, RefObjectMap, TermMap, TriplesMap
+from repro.rml.model import (
+    MappingDocument,
+    RefObjectMap,
+    TermMap,
+    TriplesMap,
+    parse_source_key,
+    source_key,
+)
 
 RDF_TYPE = "http://www.w3.org/1999/02/22-rdf-syntax-ns#type"
 
@@ -60,7 +67,7 @@ class ExecutionPlan:
 
 
 def _src_key(tm: TriplesMap) -> str:
-    return f"{tm.source.fmt}:{tm.source.path}"
+    return source_key(tm.source)
 
 
 def plan(doc: MappingDocument) -> ExecutionPlan:

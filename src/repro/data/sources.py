@@ -14,15 +14,44 @@ import json
 import numpy as np
 
 
-def load_csv(path: str) -> dict[str, np.ndarray]:
+def load_csv(path: str, delimiter: str = ",") -> dict[str, np.ndarray]:
     with open(path, newline="", encoding="utf-8") as f:
-        reader = csv.reader(f)
+        reader = csv.reader(f, delimiter=delimiter)
         header = next(reader)
         cols: list[list[str]] = [[] for _ in header]
         for row in reader:
             for i, cell in enumerate(row):
                 cols[i].append(cell)
     return {h: np.array(c, dtype=object) for h, c in zip(header, cols)}
+
+
+def expand_iterator(record, iterator: str | None) -> list:
+    """Apply the '$.items'-style dotted iterator path to one parsed record.
+
+    Shared by the eager loader and the streamed JSON datasource so the two
+    paths can never drift apart on iterator semantics."""
+    if not iterator:
+        return [record]
+    sel = iterator.lstrip("$").strip(".")
+    if not sel:
+        return [record]
+    node = record
+    for part in sel.split("."):
+        node = node[part]
+    return node if isinstance(node, list) else [node]
+
+
+def records_to_columns(records: list) -> dict[str, np.ndarray]:
+    """Rows -> columns with key union across ALL records (heterogeneous rows
+    would otherwise silently drop fields absent from records[0]); missing
+    cells become "".  Shared by the eager loader and ``stream.Block``."""
+    keys: dict[str, None] = {}
+    for r in records:
+        for k in r:
+            keys.setdefault(k, None)
+    return {
+        k: np.array([str(r.get(k, "")) for r in records], dtype=object) for k in keys
+    }
 
 
 def load_json(path: str, iterator: str | None = None) -> dict[str, np.ndarray]:
@@ -36,26 +65,20 @@ def load_json(path: str, iterator: str | None = None) -> dict[str, np.ndarray]:
         else:
             records = [json.loads(line) for line in f if line.strip()]
     if iterator:
-        sel = iterator.lstrip("$").strip(".")
-        if sel:
-            out = []
-            for r in records:
-                node = r
-                for part in sel.split("."):
-                    node = node[part]
-                out.extend(node if isinstance(node, list) else [node])
-            records = out
+        out = []
+        for r in records:
+            out.extend(expand_iterator(r, iterator))
+        records = out
     if not records:
         return {}
-    keys = list(records[0].keys())
-    return {
-        k: np.array([str(r.get(k, "")) for r in records], dtype=object) for k in keys
-    }
+    return records_to_columns(records)
 
 
 def load(path: str, fmt: str = "csv", iterator: str | None = None):
     if fmt == "csv":
         return load_csv(path)
+    if fmt == "tsv":
+        return load_csv(path, delimiter="\t")
     if fmt == "json":
         return load_json(path, iterator)
     raise ValueError(f"unsupported source format {fmt!r}")
@@ -69,7 +92,9 @@ class SourceCache:
         self._cache: dict[str, dict[str, np.ndarray]] = {}
 
     def get(self, source) -> dict[str, np.ndarray]:
-        key = f"{source.fmt}:{source.path}"
+        from repro.rml.model import source_key
+
+        key = source_key(source)
         if key not in self._cache:
             import os
 

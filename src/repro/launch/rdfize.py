@@ -2,7 +2,13 @@
 
     PYTHONPATH=src python -m repro.launch.rdfize \
         --mapping mappings.ttl --data-root data/ --out kg.nt \
-        [--engine optimized|naive] [--join sorted|hash]
+        [--engine optimized|naive] [--join sorted|hash] \
+        [--stream] [--block-rows N]
+
+``--stream`` runs the optimized engine on the ``repro.stream`` block
+subsystem: sources are read in ``--block-rows``-row chunks through a lazy
+Dataset plan (read -> project -> encode -> batch) with bounded prefetch, so
+the KG can exceed host RAM.  Output is identical to the eager engine.
 
 Mirrors the paper's tool: parse the RML document, plan, execute with the
 PTT/PJTT operators, emit N-Triples, print the per-predicate φ statistics.
@@ -21,6 +27,10 @@ def main() -> None:
     ap.add_argument("--engine", default="optimized", choices=("optimized", "naive"))
     ap.add_argument("--join", default="sorted", choices=("sorted", "hash"))
     ap.add_argument("--batch-size", type=int, default=1 << 16)
+    ap.add_argument("--stream", action="store_true",
+                    help="block-streamed out-of-core ingestion (repro.stream)")
+    ap.add_argument("--block-rows", type=int, default=1 << 14,
+                    help="rows per streamed block (with --stream)")
     args = ap.parse_args()
 
     from repro.core.executor import create_kg
@@ -34,9 +44,11 @@ def main() -> None:
         engine=args.engine,
         join_strategy=args.join,
         batch_size=args.batch_size,
+        stream=args.stream,
+        block_rows=args.block_rows,
     )
     print(f"[rdfize] {result.n_triples} unique triples in "
-          f"{result.wall_time_s:.2f}s ({args.engine} engine)")
+          f"{result.wall_time_s:.2f}s ({result.engine} engine)")
     for pred, st in result.stats.items():
         print(
             f"  {st.kind:5s} {pred.rsplit('/', 1)[-1]:30s} "

@@ -22,8 +22,13 @@ def _flatten_axes(spec: P):
             yield part
 
 
+# the version shims live in repro.compat (dependency-neutral); re-exported
+# here because model code reaches for them alongside constrain/active_axes
+from repro.compat import current_mesh, set_mesh, shard_map  # noqa: F401
+
+
 def active_axes() -> tuple:
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_mesh()
     return tuple(mesh.axis_names) if not mesh.empty else ()
 
 

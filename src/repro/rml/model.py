@@ -22,8 +22,25 @@ _PLACEHOLDER = re.compile(r"\{([^{}]+)\}")
 @dataclasses.dataclass(frozen=True)
 class LogicalSource:
     path: str
-    fmt: Literal["csv", "json"] = "csv"
+    fmt: Literal["csv", "tsv", "json"] = "csv"
     iterator: str | None = None  # JSONPath-ish iterator for json sources
+
+
+def source_key(src: LogicalSource) -> str:
+    """Canonical logical-source identity string.  The JSON iterator is part
+    of the identity: two maps over the same file with different iterators
+    are different sources (they yield different record streams)."""
+    key = f"{src.fmt}:{src.path}"
+    if src.iterator:
+        key += f"\x1f{src.iterator}"
+    return key
+
+
+def parse_source_key(key: str) -> tuple[str, str, str | None]:
+    """Inverse of :func:`source_key`: -> (fmt, path, iterator)."""
+    fmt, rest = key.split(":", 1)
+    path, _, iterator = rest.partition("\x1f")
+    return fmt, path, iterator or None
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,66 @@
+"""Logical plan nodes — what a Dataset *will* do, recorded lazily.
+
+The plan is a linear chain ``Read -> (Project | MapBlocks | Encode)* ->
+Batch?``; :mod:`repro.stream.physical` lowers it by fusing all consecutive
+per-block transforms into one operator so a block makes a single pass
+through Python per stage boundary.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.stream.block import Block
+from repro.stream.datasource import Datasource
+
+
+@dataclasses.dataclass(frozen=True)
+class LogicalOp:
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class Read(LogicalOp):
+    source: Datasource
+
+
+@dataclasses.dataclass(frozen=True)
+class Project(LogicalOp):
+    columns: tuple[str, ...]
+    fill: str | None = ""  # None -> strict (KeyError on missing column)
+
+
+@dataclasses.dataclass(frozen=True)
+class MapBlocks(LogicalOp):
+    fn: Callable[[Block], Block]
+
+
+@dataclasses.dataclass(frozen=True)
+class Encode(LogicalOp):
+    """Incremental dictionary encoding: every non-integer column of each
+    block is replaced by its int32 id column.  The dictionary is shared and
+    append-only, so ids are stable across blocks and across replays."""
+
+    dictionary: object  # repro.data.encoder.Dictionary (duck-typed: .encode)
+    columns: tuple[str, ...] | None = None  # None -> all string columns
+
+    def apply(self, block: Block) -> Block:
+        out = {}
+        for name, col in block.columns.items():
+            wanted = self.columns is None or name in self.columns
+            if wanted and not np.issubdtype(col.dtype, np.integer):
+                out[name] = self.dictionary.encode(col)
+            else:
+                out[name] = col
+        return Block(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class Batch(LogicalOp):
+    """Re-chunk the stream to exactly ``rows`` rows per block (final block
+    may be short — the consumer pads it and carries a validity mask)."""
+
+    rows: int

@@ -1,0 +1,145 @@
+"""Physical plan: lowering + pipelined execution with bounded prefetch.
+
+Lowering fuses each run of per-block logical ops (Project / MapBlocks /
+Encode) into a single :class:`FusedMapOperator`; ``Batch`` becomes a
+:class:`RebatchOperator`.  Execution is a chain of generators with the read
+stage handed off to a background thread through a bounded queue, so disk I/O
+and parsing overlap the jitted compute of the consumer — the classic
+two-stage pipeline — while the queue bound keeps at most
+``prefetch + 1`` blocks in flight.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator
+
+from repro.stream.block import Block
+from repro.stream.datasource import Datasource
+from repro.stream.logical import Batch, Encode, LogicalOp, MapBlocks, Project, Read
+
+_DONE = object()
+
+
+class _Prefetcher:
+    """Background-thread handoff with a bounded queue and clean shutdown.
+    The pump thread starts lazily on first consumption, so an iterator that
+    is created but never drained holds no thread and no open file."""
+
+    def __init__(self, it: Iterator[Block], capacity: int):
+        self._q: queue.Queue = queue.Queue(maxsize=max(capacity, 1))
+        self._stop = threading.Event()
+        self._started = False
+        self._thread = threading.Thread(target=self._pump, args=(it,), daemon=True)
+
+    def _pump(self, it: Iterator[Block]) -> None:
+        try:
+            for item in it:
+                if not self._put((False, item)):
+                    return
+            self._put((False, _DONE))
+        except BaseException as exc:  # propagate to the consumer
+            self._put((True, exc))
+
+    def _put(self, item) -> bool:
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def __iter__(self):
+        try:
+            if not self._started:
+                self._started = True
+                self._thread.start()
+            while True:
+                is_err, item = self._q.get()
+                if is_err:
+                    raise item
+                if item is _DONE:
+                    return
+                yield item
+        finally:
+            self.close()
+
+    def close(self) -> None:
+        self._stop.set()
+
+
+def _read_blocks(source: Datasource) -> Iterator[Block]:
+    for task in source.read_tasks():
+        yield from task.read()
+
+
+def _fused(fns: list[Callable[[Block], Block]], it: Iterator[Block]) -> Iterator[Block]:
+    for block in it:
+        for fn in fns:
+            block = fn(block)
+        yield block
+
+
+def _rebatch(rows: int, it: Iterator[Block]) -> Iterator[Block]:
+    pending: list[Block] = []
+    n = 0
+    for block in it:
+        if block.n_rows == 0:
+            continue
+        if not pending and block.n_rows == rows:  # fast path: already sized
+            yield block
+            continue
+        pending.append(block)
+        n += block.n_rows
+        while n >= rows:
+            take, filled, acc = [], 0, []
+            for b in pending:
+                need = rows - filled
+                if need == 0:
+                    acc.append(b)
+                elif b.n_rows <= need:
+                    take.append(b)
+                    filled += b.n_rows
+                else:
+                    take.append(b.slice(0, need))
+                    acc.append(b.slice(need, b.n_rows))
+                    filled = rows
+            yield Block.concat(take) if len(take) > 1 else take[0]
+            pending = acc
+            n -= rows
+    if pending:
+        yield Block.concat(pending) if len(pending) > 1 else pending[0]
+
+
+def _op_fn(op: LogicalOp) -> Callable[[Block], Block]:
+    if isinstance(op, Project):
+        cols, fill = op.columns, op.fill
+        return lambda b: b.select(cols, fill)
+    if isinstance(op, MapBlocks):
+        return op.fn
+    if isinstance(op, Encode):
+        return op.apply
+    raise TypeError(f"not a per-block op: {op!r}")
+
+
+def execute(plan: tuple[LogicalOp, ...], prefetch: int = 2) -> Iterator[Block]:
+    """Lower the logical plan and run it as a pipelined block iterator."""
+    if not plan or not isinstance(plan[0], Read):
+        raise ValueError("logical plan must start with a Read")
+    it: Iterator[Block] = _read_blocks(plan[0].source)
+    if prefetch > 0:  # overlap I/O + parsing with downstream compute
+        it = iter(_Prefetcher(it, prefetch))
+    fns: list[Callable[[Block], Block]] = []
+    for op in plan[1:]:
+        if isinstance(op, Batch):
+            if fns:
+                it = _fused(fns, it)
+                fns = []
+            it = _rebatch(op.rows, it)
+        else:
+            fns.append(_op_fn(op))
+    if fns:
+        it = _fused(fns, it)
+    return it

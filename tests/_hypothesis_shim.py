@@ -1,0 +1,64 @@
+"""Minimal stand-in for ``hypothesis`` when it isn't installed.
+
+The test image doesn't always ship hypothesis; property tests then fall back
+to this shim, which draws a fixed number of seeded pseudo-random examples per
+test instead of skipping the whole module.  Only the tiny API surface the
+test-suite uses is provided: ``given`` (kwargs form), ``settings``
+(``max_examples``/``deadline``), ``st.integers`` and ``st.sampled_from``.
+"""
+
+from __future__ import annotations
+
+
+import types
+
+import numpy as np
+
+_DEFAULT_EXAMPLES = 20
+_SEED = 0x5EED
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _sampled_from(options) -> _Strategy:
+    opts = list(options)
+    return _Strategy(lambda rng: opts[int(rng.integers(0, len(opts)))])
+
+
+def given(**strategies):
+    def decorate(fn):
+        # NB: deliberately no functools.wraps — pytest must see a zero-arg
+        # signature, not the strategy parameters (it would treat them as
+        # fixtures).
+        def run():
+            rng = np.random.default_rng(_SEED)
+            for _ in range(getattr(run, "_max_examples", _DEFAULT_EXAMPLES)):
+                fn(**{k: s.draw(rng) for k, s in strategies.items()})
+
+        run.__name__ = fn.__name__
+        run.__doc__ = fn.__doc__
+        run._max_examples = _DEFAULT_EXAMPLES
+        return run
+
+    return decorate
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+    def decorate(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+st = types.SimpleNamespace(integers=_integers, sampled_from=_sampled_from)

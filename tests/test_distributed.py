@@ -19,8 +19,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import hashing, distributed
 from collections import defaultdict
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.compat import compat_make_mesh
+
+mesh = compat_make_mesh((4, 2), ("data", "model"))
 sh = NamedSharding(mesh, P(("data", "model")))
 rng = np.random.default_rng(0)
 out = {}

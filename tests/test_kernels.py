@@ -8,7 +8,10 @@ equality, no tolerances needed).
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # test image without hypothesis: seeded-example fallback
+    from _hypothesis_shim import given, settings, st
 
 from repro.core import hashing, hashset
 from repro.kernels import ops, ref
