@@ -7,7 +7,13 @@ Prints ``name,us_per_call,derived`` CSV rows:
   opmodel/*    — §III.iv operation-count model (derived = φ̂/φ ratio)
   kernels/*    — Pallas kernel micro-benches vs jnp reference paths
   dedup/*      — dedup_gather traffic/time vs plain gather
+  stream/*     — streamed vs eager ingestion (rows/s, peak traced alloc)
+  kg/*         — repro.kg store build + batched single-pattern queries/s
   roofline/*   — (when results/dryrun.json exists) the three terms per cell
+
+The ``stream`` and ``kg`` sections also write machine-readable
+``BENCH_stream.json`` / ``BENCH_kg.json`` (to ``--json-dir``, default the
+current directory) so the perf trajectory can be tracked across commits.
 
 ``--full`` widens fig56 to the paper's 1M-row tier.
 """
@@ -15,6 +21,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -22,6 +29,13 @@ import time
 
 def _row(name: str, us: float, derived: str = "") -> None:
     print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def _write_json(json_dir: str, name: str, payload: dict) -> None:
+    path = os.path.join(json_dir, name)
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"# wrote {path}", flush=True)
 
 
 def bench_fig56(full: bool) -> None:
@@ -128,12 +142,13 @@ def bench_dedup_gather() -> None:
         )
 
 
-def bench_stream() -> None:
+def bench_stream(json_dir: str = ".") -> None:
     """Streaming vs eager ingestion over the generator's 10K/100K CSV
     testbeds: rows/s and peak traced allocation (tracemalloc covers numpy
     buffers; RSS is monotonic per process and useless for per-phase peaks).
     The streamed path reads + dictionary-encodes block-at-a-time, the eager
-    path materializes the whole table first."""
+    path materializes the whole table first.  Results also land in
+    ``BENCH_stream.json``."""
     import tempfile
     import tracemalloc
 
@@ -142,6 +157,7 @@ def bench_stream() -> None:
     from repro.rml import generator
     from repro.stream import read_csv
 
+    report: dict[str, dict] = {}
     for n in (10_000, 100_000):
         tb = generator.make_testbed("SOM", n, 0.75, n_poms=2, seed=0)
         with tempfile.TemporaryDirectory() as d:
@@ -173,6 +189,59 @@ def bench_stream() -> None:
                     dt * 1e6,
                     f"rows_per_s={n / dt:.0f};peak_alloc_mb={peak / 1e6:.1f}",
                 )
+                report[f"{name}-{n}"] = {
+                    "rows": n,
+                    "wall_s": dt,
+                    "rows_per_s": n / dt,
+                    "peak_alloc_mb": peak / 1e6,
+                }
+    _write_json(json_dir, "BENCH_stream.json", report)
+
+
+def bench_kg(json_dir: str = ".") -> None:
+    """The ``repro.kg`` serving benchmark on the paper's 100K-row testbed:
+    KG creation -> ``to_store()`` (term re-key + three jax lexsorts) ->
+    batched single-pattern queries/s through the jitted range-scan path.
+    Writes ``BENCH_kg.json``."""
+    import tracemalloc
+
+    from repro.core.executor import create_kg
+    from repro.kg.bench import bench_single_pattern
+    from repro.rml import generator
+
+    n = 100_000
+    tb = generator.make_testbed("SOM", n, 0.75, n_poms=2, seed=0)
+    tables = {"csv:child.csv": tb.child}
+    if tb.parent is not None:
+        tables["csv:parent.csv"] = tb.parent
+    t0 = time.perf_counter()
+    kg = create_kg(tb.doc, tables=tables)
+    t_create = time.perf_counter() - t0
+    tracemalloc.start()
+    t0 = time.perf_counter()
+    store = kg.to_store()
+    t_build = time.perf_counter() - t0
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    report = bench_single_pattern(store, n_queries=50_000, batch=4096)
+    report.update(
+        {
+            "testbed_rows": n,
+            "create_s": t_create,
+            "store_build_s": t_build,
+            "store_build_peak_alloc_mb": peak / 1e6,
+        }
+    )
+    _row(
+        f"kg/build-{n}", t_build * 1e6,
+        f"triples={store.n_triples};peak_alloc_mb={peak / 1e6:.1f}",
+    )
+    _row(
+        f"kg/query-{n}",
+        report["wall_s"] / report["n_queries"] * 1e6,
+        f"queries_per_s={report['queries_per_s']:.0f};batch={report['batch']}",
+    )
+    _write_json(json_dir, "BENCH_kg.json", report)
 
 
 def bench_roofline() -> None:
@@ -198,7 +267,9 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     choices=(None, "fig56", "opmodel", "kernels", "dedup",
-                             "stream", "roofline"))
+                             "stream", "kg", "roofline"))
+    ap.add_argument("--json-dir", default=".",
+                    help="where BENCH_*.json reports are written")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -207,7 +278,8 @@ def main() -> None:
         "opmodel": bench_op_model,
         "kernels": bench_kernels,
         "dedup": bench_dedup_gather,
-        "stream": bench_stream,
+        "stream": lambda: bench_stream(args.json_dir),
+        "kg": lambda: bench_kg(args.json_dir),
         "roofline": bench_roofline,
     }
     for name, fn in sections.items():

@@ -31,7 +31,8 @@ from repro.core import hashing, naive, pjtt, planner
 from repro.core import hashset
 from repro.core.hashset import next_pow2
 from repro.data import pipeline
-from repro.data.encoder import Dictionary, join_columns, render_template
+from repro.data.encoder import Dictionary, join_columns
+from repro.kg.terms import render_term
 from repro.data.sources import SourceCache
 from repro.rml.model import MappingDocument
 
@@ -190,6 +191,14 @@ class KGResult:
         strings do not)."""
         return sorted(self.iter_ntriples())
 
+    def to_store(self):
+        """Servable form: a queryable, persistable ``repro.kg.TripleStore``
+        built array-at-a-time over these int32 columns (works identically
+        for eager and streamed runs)."""
+        from repro.kg.store import TripleStore
+
+        return TripleStore.from_kg(self.dictionary, self.triples)
+
     def as_set(self) -> set[tuple]:
         """Exact triple identity set (for engine-equivalence assertions)."""
         out = set()
@@ -215,14 +224,8 @@ def _sources_by_key(doc: MappingDocument) -> dict:
     }
 
 
-def _render(d: Dictionary, pat_id: int, val_id: int) -> str:
-    pat = d.decode_scalar(pat_id)
-    kind, pattern = pat.split(":", 1)
-    value = d.decode_scalar(val_id) if "{}" in pattern else ""
-    body = render_template(pattern, value) if "{}" in pattern else pattern
-    if kind == "iri":
-        return f"<{body}>"
-    return '"' + body.replace('"', '\\"') + '"'
+# shared with the repro.kg decode path: full N-Triples escaping, not just `"`
+_render = render_term
 
 
 # --------------------------------------------------------------------------

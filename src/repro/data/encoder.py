@@ -48,6 +48,18 @@ class Dictionary:
     def decode_scalar(self, vid: int) -> str:
         return self._to_str[int(vid)]
 
+    def strings(self) -> list[str]:
+        """The id -> string table (ids are positions) — for persistence."""
+        return list(self._to_str)
+
+    @classmethod
+    def from_strings(cls, strings: list[str]) -> "Dictionary":
+        """Rebuild from a persisted id -> string table."""
+        d = cls()
+        d._to_str = list(strings)
+        d._to_id = {s: i for i, s in enumerate(strings)}
+        return d
+
 
 def join_columns(columns: list[np.ndarray]) -> np.ndarray:
     """Combine multi-placeholder template columns into one value string."""

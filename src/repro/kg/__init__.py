@@ -1,0 +1,52 @@
+"""``repro.kg`` — queryable, persistable triple store over engine output.
+
+The creation engine (``repro.core.executor``) stops at a write-only
+:class:`KGResult`; this subsystem turns that into a *servable* artifact:
+
+* :mod:`repro.kg.store`   — immutable dictionary-encoded int32 ``(s, p, o)``
+  columns with SPO/POS/OSP sorted permutation indexes (jax stable sorts).
+* :mod:`repro.kg.query`   — jitted lexicographic range scans for single
+  triple patterns (batched, many queries per dispatch) and conjunctive BGP
+  evaluation on encoded binding tables via the PJTT join machinery.
+* :mod:`repro.kg.persist` — versioned ``.kgz`` npz snapshots (build once,
+  serve many times).
+* :mod:`repro.kg.terms`   — shared term rendering with full N-Triples
+  escaping (also used by the engine's N-Triples dump).
+
+Entry points: ``KGResult.to_store()`` and ``python -m repro.launch.query``.
+"""
+
+from repro.kg.query import (
+    Bindings,
+    TriplePattern,
+    binding_set,
+    decode_bindings,
+    match_counts,
+    match_pattern,
+    oracle_solve,
+    parse_bgp,
+    solve,
+    solve_text,
+)
+from repro.kg.persist import load, save
+from repro.kg.store import TripleStore
+from repro.kg.terms import escape_literal, render_term, unescape_literal
+
+__all__ = [
+    "Bindings",
+    "TriplePattern",
+    "TripleStore",
+    "binding_set",
+    "decode_bindings",
+    "escape_literal",
+    "load",
+    "match_counts",
+    "match_pattern",
+    "oracle_solve",
+    "parse_bgp",
+    "render_term",
+    "save",
+    "solve",
+    "solve_text",
+    "unescape_literal",
+]

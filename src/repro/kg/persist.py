@@ -1,0 +1,70 @@
+"""``.kgz`` snapshots — build the store once, serve it many times.
+
+A snapshot is a plain (uncompressed) NumPy ``.npz`` archive; every member is
+a flat array, so the format is mmap-friendly and versioned:
+
+==============  =========  ==================================================
+member          dtype      contents
+==============  =========  ==================================================
+``meta``        int64[2]   (format version, n_triples)
+``dict_blob``   uint8      all dictionary strings, utf-8, concatenated
+``dict_off``    int64      end offset of each string into ``dict_blob``
+``term_pat``    int32[T]   term id -> pattern id
+``term_val``    int32[T]   term id -> value id
+``s  p  o``     int32[n]   triple columns, term ids
+``perm_spo``    int32[n]   sorted permutations (likewise ``perm_pos``,
+                           ``perm_osp``) — load gathers, never re-sorts
+==============  =========  ==================================================
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.encoder import Dictionary
+from repro.kg.store import ORDERS, TripleStore
+
+FORMAT_VERSION = 1
+
+
+def save(store: TripleStore, path: str) -> None:
+    strings = store.dictionary.strings()
+    encoded = [s.encode("utf-8") for s in strings]
+    blob = np.frombuffer(b"".join(encoded), dtype=np.uint8)
+    off = np.cumsum([len(e) for e in encoded], dtype=np.int64)
+    members = {
+        "meta": np.asarray([FORMAT_VERSION, store.n_triples], np.int64),
+        "dict_blob": blob,
+        "dict_off": off,
+        "term_pat": store.term_pat,
+        "term_val": store.term_val,
+        "s": store.s,
+        "p": store.p,
+        "o": store.o,
+    }
+    for order in ORDERS:
+        members[f"perm_{order}"] = store.indexes[order].perm
+    with open(path, "wb") as f:
+        np.savez(f, **members)
+
+
+def load(path: str) -> TripleStore:
+    with np.load(path) as z:
+        version, _n = (int(x) for x in z["meta"])
+        if version != FORMAT_VERSION:
+            raise ValueError(
+                f"{path}: kgz format v{version}, this build reads v{FORMAT_VERSION}"
+            )
+        blob = z["dict_blob"].tobytes()
+        off = z["dict_off"]
+        start = 0
+        strings = []
+        for end in off:
+            strings.append(blob[start:end].decode("utf-8"))
+            start = int(end)
+        return TripleStore.build(
+            Dictionary.from_strings(strings),
+            z["term_pat"], z["term_val"],
+            z["s"], z["p"], z["o"],
+            perms={order: z[f"perm_{order}"] for order in ORDERS},
+        )

@@ -1,0 +1,453 @@
+"""Triple-pattern matching and BGP evaluation over a :class:`TripleStore`.
+
+Single pattern
+--------------
+A pattern binds a subset of (s, p, o); each of the 8 bound-position masks is
+a contiguous range of exactly one sort order (SPO / POS / OSP), found with a
+*lexicographic binary search* over the three sorted int32 columns — jitted,
+vectorized over a whole batch of queries, so the serving path answers many
+patterns per dispatch (`match_counts`).  Wildcard positions take ``-1`` for
+the lower bound and ``INT32_MAX`` for the upper (term ids are dense and
+strictly between the two).
+
+BGP (conjunctive) queries
+-------------------------
+`solve` evaluates each pattern to an encoded *binding table* (int32 term-id
+columns, one per variable), orders tables by cardinality, and folds them
+with the engine's own PJTT sorted-merge machinery: the smaller table's
+shared-variable column becomes the PJTT key with *row indices* as payload,
+the probe's padded-ragged result expands to matched row pairs, and residual
+shared variables filter by equality.  Term ids decode to strings only at
+output (`decode_bindings`).
+
+Correctness is anchored by `oracle_solve`, a naive Python set-scan over the
+same store, used by the tests as the reference semantics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import re
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pjtt
+from repro.core.hashset import next_pow2
+from repro.kg.store import ORDERS, TripleStore
+from repro.kg.terms import canonical_term
+
+I32_MAX = np.int32(np.iinfo(np.int32).max)
+
+# bound-position mask (s, p, o) -> index order whose sort prefix covers it
+_ORDER_FOR_MASK = {
+    (False, False, False): "spo",
+    (True, False, False): "spo",
+    (True, True, False): "spo",
+    (True, True, True): "spo",
+    (False, True, False): "pos",
+    (False, True, True): "pos",
+    (False, False, True): "osp",
+    (True, False, True): "osp",
+}
+
+
+# --------------------------------------------------------------------------
+# pattern parsing
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TriplePattern:
+    """One pattern; each slot is a variable name (``"?x"``) or a constant
+    rendered-term string (``"<iri>"`` / ``'"literal"'``)."""
+
+    s: str
+    p: str
+    o: str
+
+    @property
+    def slots(self) -> tuple[str, str, str]:
+        return (self.s, self.p, self.o)
+
+    @property
+    def variables(self) -> tuple[str, ...]:
+        return tuple(dict.fromkeys(t for t in self.slots if t.startswith("?")))
+
+
+_PAT_TOKEN = re.compile(
+    r'\s*(?P<var>\?[A-Za-z_]\w*)'
+    r'|\s*(?P<iri><[^>]*>)'
+    r'|\s*(?P<lit>"(?:[^"\\]|\\.)*")'
+    r'|\s*(?P<dot>\.)'
+)
+
+
+def parse_bgp(text: str) -> list[TriplePattern]:
+    """Parse ``'?s <p> ?o . ?o <q> "v"'`` into patterns (the ``.`` separator
+    between patterns is optional; a trailing ``.`` is allowed)."""
+    terms: list[str] = []
+    patterns: list[TriplePattern] = []
+
+    def flush():
+        if not terms:
+            return
+        if len(terms) != 3:
+            raise ValueError(
+                f"triple pattern needs 3 terms, got {len(terms)}: {terms}"
+            )
+        s, p, o = terms
+        patterns.append(
+            TriplePattern(
+                s if s.startswith("?") else canonical_term(s),
+                p if p.startswith("?") else canonical_term(p),
+                o if o.startswith("?") else canonical_term(o),
+            )
+        )
+        terms.clear()
+
+    pos = 0
+    while pos < len(text):
+        m = _PAT_TOKEN.match(text, pos)
+        if not m:
+            if text[pos:].strip():
+                raise ValueError(f"cannot parse pattern at: {text[pos:pos+40]!r}")
+            break
+        pos = m.end()
+        if m.lastgroup == "dot":
+            flush()
+        else:
+            terms.append(m.group().strip())
+            if len(terms) == 3:
+                flush()
+    flush()
+    if not patterns:
+        raise ValueError("empty basic graph pattern")
+    return patterns
+
+
+# --------------------------------------------------------------------------
+# jitted lexicographic range scan
+# --------------------------------------------------------------------------
+
+
+def _lex_search(c0, c1, c2, q0, q1, q2, upper: bool):
+    """Vectorized lexicographic binary search: for each query tuple, the
+    count of sorted rows lex-< (lower bound) or lex-<= (upper bound) the
+    tuple.  32 rounds cover any int32-indexable column."""
+    n = c0.shape[0]
+    lo = jnp.zeros(q0.shape, jnp.int32)
+    hi = jnp.full(q0.shape, n, jnp.int32)
+
+    def body(_, state):
+        lo, hi = state
+        # overflow-safe midpoint: lo + hi can exceed int32 at n > 2^30 rows
+        mid = lo + ((hi - lo) >> 1)
+        g = jnp.clip(mid, 0, max(n - 1, 0))
+        m0, m1, m2 = c0[g], c1[g], c2[g]
+        tail = (m2 <= q2) if upper else (m2 < q2)
+        before = (m0 < q0) | ((m0 == q0) & ((m1 < q1) | ((m1 == q1) & tail)))
+        open_ = lo < hi
+        return (
+            jnp.where(open_ & before, mid + 1, lo),
+            jnp.where(open_ & ~before, mid, hi),
+        )
+
+    lo, _ = jax.lax.fori_loop(0, 32, body, (lo, hi))
+    return lo
+
+
+@jax.jit
+def _lex_range(c0, c1, c2, lo0, lo1, lo2, hi0, hi1, hi2):
+    """(start, end) row ranges for a batch of bound-prefix queries: a lower
+    and an upper lexicographic search, the upper with INT32_MAX filling the
+    wildcard slots (term ids are dense, strictly below it)."""
+    return (
+        _lex_search(c0, c1, c2, lo0, lo1, lo2, upper=False),
+        _lex_search(c0, c1, c2, hi0, hi1, hi2, upper=True),
+    )
+
+
+def _query_bounds(ids_primary_order: np.ndarray):
+    """int32[m, 3] columns in *index order* with -1 wildcards -> the six
+    lower/upper query columns."""
+    q = ids_primary_order
+    wild = q < 0
+    lo = np.where(wild, np.int32(-1), q).astype(np.int32)
+    hi = np.where(wild, I32_MAX, q).astype(np.int32)
+    return lo, hi
+
+
+def match_ranges(
+    store: TripleStore, patterns_spo: np.ndarray
+) -> tuple[np.ndarray, np.ndarray, list[str]]:
+    """Batch of patterns as int32[m, 3] term ids in (s, p, o) order with -1
+    for wildcards -> per-pattern (start, end) ranges plus the index order
+    each range refers to.  Queries are grouped by bound mask, one jitted
+    dispatch per distinct mask (a homogeneous serving batch is exactly one
+    dispatch)."""
+    q = np.asarray(patterns_spo, np.int32).reshape(-1, 3)
+    m = len(q)
+    starts = np.zeros(m, np.int64)
+    ends = np.zeros(m, np.int64)
+    orders = [""] * m
+    bound = q >= 0
+    masks = {tuple(bool(x) for x in row) for row in bound}
+    for mask in masks:
+        sel = np.nonzero((bound == np.asarray(mask)).all(axis=1))[0]
+        order = _ORDER_FOR_MASK[mask]
+        a, b, c = (q[sel][:, i] for i in ORDERS[order])
+        qcols = np.stack([a, b, c], axis=1)
+        # pad each mask group to a power-of-two batch so mixed-mask batches
+        # compile O(log batch) shapes total, not one per group size; pad
+        # rows are all-wildcard queries whose results are sliced away
+        k = len(sel)
+        npad = next_pow2(max(k, 1))
+        if npad > k:
+            qcols = np.concatenate(
+                [qcols, np.full((npad - k, 3), -1, np.int32)]
+            )
+        lo, hi = _query_bounds(qcols)
+        c0, c1, c2 = store.device_cols(order)
+        lo_i, hi_i = _lex_range(
+            c0, c1, c2,
+            jnp.asarray(lo[:, 0]), jnp.asarray(lo[:, 1]), jnp.asarray(lo[:, 2]),
+            jnp.asarray(hi[:, 0]), jnp.asarray(hi[:, 1]), jnp.asarray(hi[:, 2]),
+        )
+        starts[sel] = np.asarray(lo_i)[:k]
+        ends[sel] = np.asarray(hi_i)[:k]
+        for i in sel:
+            orders[i] = order
+    return starts, ends, orders
+
+
+def match_counts(store: TripleStore, patterns_spo: np.ndarray) -> np.ndarray:
+    """Result cardinality per pattern — the batched serving/bench path."""
+    starts, ends, _ = match_ranges(store, patterns_spo)
+    return (ends - starts).astype(np.int64)
+
+
+def match_pattern(store: TripleStore, spo_ids) -> np.ndarray:
+    """One pattern (term ids, None = wildcard) -> matching row ids into
+    ``store.s/p/o`` (host array, variable length)."""
+    q = np.asarray(
+        [[-1 if t is None else int(t) for t in spo_ids]], np.int32
+    )
+    starts, ends, orders = match_ranges(store, q)
+    idx = store.indexes[orders[0]]
+    return idx.perm[int(starts[0]) : int(ends[0])]
+
+
+# --------------------------------------------------------------------------
+# binding tables + PJTT joins
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Bindings:
+    """Encoded solution table: one int32 term-id column per variable.  A
+    zero-variable table (all-constant pattern) is a pure existence filter
+    and carries only its row count (0 or 1)."""
+
+    cols: dict[str, np.ndarray]
+    n: int
+
+    @property
+    def variables(self) -> tuple[str, ...]:
+        return tuple(self.cols)
+
+
+@partial(jax.jit, static_argnums=(3,))
+def _probe_rows(skeys, srows, child_keys, max_matches):
+    pr = pjtt.probe_sorted(pjtt.PJTTSorted(skeys, srows), child_keys, max_matches)
+    return pr.subjects, pr.valid, pr.truncated
+
+
+def _pattern_bindings(store: TripleStore, pat: TriplePattern) -> Bindings:
+    """Evaluate one pattern to a binding table (with same-variable equality
+    applied for patterns like ``?x <p> ?x``)."""
+    ids: list[int | None] = []
+    for t in pat.slots:
+        if t.startswith("?"):
+            ids.append(None)
+        else:
+            tid = store.term_id(t)
+            if tid is None:  # constant not in the graph: empty result
+                return Bindings({v: np.zeros(0, np.int32) for v in pat.variables}, 0)
+            ids.append(tid)
+    rows = match_pattern(store, ids)
+    triple_cols = (store.s, store.p, store.o)
+    cols: dict[str, np.ndarray] = {}
+    keep = np.ones(len(rows), bool)
+    for slot, term in zip(range(3), pat.slots):
+        if not term.startswith("?"):
+            continue
+        col = triple_cols[slot][rows]
+        if term in cols:  # repeated variable inside one pattern
+            keep &= cols[term] == col
+        else:
+            cols[term] = col
+    if not keep.all():
+        cols = {v: c[keep] for v, c in cols.items()}
+    n = int(keep.sum()) if cols else len(rows)
+    if not cols:
+        # all-constant pattern: existence filter
+        return Bindings({}, min(n, 1))
+    return Bindings(cols, n)
+
+
+def _cross_join(a: Bindings, b: Bindings) -> Bindings:
+    ia = np.repeat(np.arange(a.n), b.n)
+    ib = np.tile(np.arange(b.n), a.n)
+    cols = {v: c[ia] for v, c in a.cols.items()}
+    cols.update({v: c[ib] for v, c in b.cols.items()})
+    return Bindings(cols, a.n * b.n)
+
+
+def _join(a: Bindings, b: Bindings) -> Bindings:
+    """Natural join on shared variables via the PJTT sorted-merge index:
+    build over the smaller side keyed on the first shared variable with row
+    indices as payload, probe with the larger side, expand the padded
+    result, then filter residual shared variables by equality."""
+    if a.n == 0 or b.n == 0:
+        cols = {v: np.zeros(0, np.int32) for v in {**a.cols, **b.cols}}
+        return Bindings(cols, 0)
+    # existence filters (zero-variable tables, n >= 1 here): keep the other side
+    if not a.cols:
+        return Bindings(dict(b.cols), b.n)
+    if not b.cols:
+        return Bindings(dict(a.cols), a.n)
+    shared = [v for v in a.cols if v in b.cols]
+    if not shared:
+        return _cross_join(a, b)
+    build, probe = (a, b) if a.n <= b.n else (b, a)
+    key = shared[0]
+    bkeys = build.cols[key]
+    skeys = np.sort(bkeys)
+    pkeys = probe.cols[key]
+    spans = np.searchsorted(skeys, pkeys, side="right") - np.searchsorted(
+        skeys, pkeys, side="left"
+    )
+    max_matches = max(int(spans.max()) if len(spans) else 0, 1)
+    srows, valid, trunc = _probe_rows(
+        jnp.asarray(skeys),
+        jnp.asarray(np.argsort(bkeys, kind="stable").astype(np.int32)),
+        jnp.asarray(pkeys),
+        max_matches,
+    )
+    assert not bool(trunc), "PJTT probe truncated despite exact span sizing"
+    srows = np.asarray(srows)
+    valid = np.asarray(valid)
+    prow, k = np.nonzero(valid)
+    brow = srows[prow, k]
+    keep = np.ones(len(prow), bool)
+    for v in shared[1:]:
+        keep &= build.cols[v][brow] == probe.cols[v][prow]
+    prow, brow = prow[keep], brow[keep]
+    cols = {v: c[brow] for v, c in build.cols.items()}
+    cols.update({v: c[prow] for v, c in probe.cols.items() if v not in cols})
+    return Bindings(cols, len(prow))
+
+
+def solve(store: TripleStore, patterns: list[TriplePattern]) -> Bindings:
+    """Conjunctive BGP evaluation: per-pattern binding tables folded
+    smallest-first, but always preferring a table *connected* to the
+    accumulated result (shares a variable) — a disconnected pair would
+    cross-join, and the product must be deferred until no join key is
+    available at all."""
+    tables = [_pattern_bindings(store, p) for p in patterns]
+    tables.sort(key=lambda t: t.n)
+    out = tables.pop(0)
+    while tables:
+        i = next(
+            (
+                j for j, t in enumerate(tables)
+                if not t.cols or not out.cols
+                or any(v in out.cols for v in t.cols)
+            ),
+            0,  # nothing connected: cross-join the smallest remaining
+        )
+        out = _join(out, tables.pop(i))
+    return out
+
+
+def solve_text(store: TripleStore, text: str) -> Bindings:
+    return solve(store, parse_bgp(text))
+
+
+def decode_bindings(
+    store: TripleStore, b: Bindings, limit: int | None = None
+) -> list[dict[str, str]]:
+    """Term-id table -> rendered rows; the only string-producing step."""
+    n = b.n if limit is None else min(b.n, limit)
+    return [
+        {v: store.decode_term(int(c[i])) for v, c in b.cols.items()}
+        for i in range(n)
+    ]
+
+
+def binding_set(store: TripleStore, b: Bindings) -> set[tuple]:
+    """Canonical comparable form: a set of ((var, rendered term), ...) rows
+    sorted by variable name — what the tests compare against the oracle."""
+    out = set()
+    for i in range(b.n):
+        out.add(
+            tuple(
+                (v, store.decode_term(int(b.cols[v][i])))
+                for v in sorted(b.cols)
+            )
+        )
+    return out
+
+
+# --------------------------------------------------------------------------
+# reference oracle — naive Python set scan (the tests' ground truth)
+# --------------------------------------------------------------------------
+
+
+def oracle_solve(store: TripleStore, patterns: list[TriplePattern]) -> set[tuple]:
+    """Evaluate the BGP by brute force over the decoded triple list: match
+    every pattern against every triple, then natural-join the per-pattern
+    binding sets pairwise.  Quadratic and string-based on purpose — it
+    shares no code with the indexed engine."""
+    triples = [
+        (
+            store.decode_term(int(store.s[i])),
+            store.decode_term(int(store.p[i])),
+            store.decode_term(int(store.o[i])),
+        )
+        for i in range(store.n_triples)
+    ]
+
+    def match_one(pat: TriplePattern) -> list[dict[str, str]]:
+        out = []
+        for t in triples:
+            env: dict[str, str] = {}
+            for term, value in zip(pat.slots, t):
+                if term.startswith("?"):
+                    if env.get(term, value) != value:
+                        env = None  # type: ignore[assignment]
+                        break
+                    env[term] = value
+                elif term != value:
+                    env = None  # type: ignore[assignment]
+                    break
+            if env is not None:
+                out.append(env)
+        return out
+
+    solutions = [dict()]  # type: list[dict[str, str]]
+    for pat in patterns:
+        rows = match_one(pat)
+        merged = []
+        for env in solutions:
+            for row in rows:
+                if all(env.get(v, row[v]) == row[v] for v in row):
+                    merged.append({**env, **row})
+        solutions = merged
+    return {
+        tuple(sorted(env.items())) for env in solutions
+    }

@@ -1,0 +1,195 @@
+"""Immutable dictionary-encoded triple store — the servable KG artifact.
+
+The engine's :class:`~repro.core.executor.KGResult` is write-only: per
+predicate, parallel ``(pattern id, value id)`` int32 columns.  A
+:class:`TripleStore` re-keys those pairs into a dense *term id* space (one
+int32 id per distinct RDF term — subject, predicate, or object alike) and
+holds the graph as three int32 columns ``(s, p, o)`` plus three sorted
+permutation indexes:
+
+* **SPO** — triples lexsorted by (subject, predicate, object)
+* **POS** — by (predicate, object, subject)
+* **OSP** — by (object, subject, predicate)
+
+Every one of the 8 triple-pattern bound-position masks is a contiguous row
+range of exactly one of these orders, so a pattern match is a pair of
+(vectorized, jittable) lexicographic binary searches — see ``repro.kg.query``.
+The permutations are built with jax stable argsorts; construction from a
+``KGResult`` is array-at-a-time over the existing int32 columns (strings are
+decoded only at output time, never during build or query).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.encoder import Dictionary
+from repro.kg.terms import render_term
+
+# index order -> the (primary, secondary, tertiary) triple positions
+ORDERS: dict[str, tuple[int, int, int]] = {
+    "spo": (0, 1, 2),
+    "pos": (1, 2, 0),
+    "osp": (2, 0, 1),
+}
+
+
+@jax.jit
+def _lexsort3(k0: jnp.ndarray, k1: jnp.ndarray, k2: jnp.ndarray) -> jnp.ndarray:
+    """Permutation sorting rows lexicographically by (k0, k1, k2): three
+    stable argsorts, least-significant key first."""
+    o = jnp.argsort(k2, stable=True)
+    o = o[jnp.argsort(k1[o], stable=True)]
+    return o[jnp.argsort(k0[o], stable=True)]
+
+
+class Index(NamedTuple):
+    """One sort order: ``perm`` maps sorted rank -> row id; ``cols`` are the
+    (primary, secondary, tertiary) term-id columns in sorted order."""
+
+    order: str
+    perm: np.ndarray                                    # int32[n]
+    cols: tuple[np.ndarray, np.ndarray, np.ndarray]     # int32[n] each
+
+
+def _pack(pat: np.ndarray, val: np.ndarray) -> np.ndarray:
+    """(pattern id, value id) int32 pairs -> one int64 key (ids are >= 0)."""
+    return (pat.astype(np.int64) << 32) | val.astype(np.int64)
+
+
+@dataclasses.dataclass
+class TripleStore:
+    dictionary: Dictionary
+    term_pat: np.ndarray   # int32[T]  term id -> pattern id
+    term_val: np.ndarray   # int32[T]  term id -> value id
+    s: np.ndarray          # int32[n]  term ids
+    p: np.ndarray
+    o: np.ndarray
+    indexes: dict[str, Index]
+
+    # lazy caches (device copies of index columns; rendered-term lookup)
+    _dev: dict = dataclasses.field(default_factory=dict, repr=False)
+    _term_ids: dict[str, int] | None = dataclasses.field(default=None, repr=False)
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def from_kg(
+        cls, dictionary: Dictionary, triples: dict[str, dict[str, np.ndarray]]
+    ) -> "TripleStore":
+        """Build from engine output (``KGResult.dictionary`` /
+        ``KGResult.triples``) without rendering a single term string."""
+        spat, sval, ppairs, opat, oval = [], [], [], [], []
+        for pred, t in triples.items():
+            n = len(t["subj_val"])
+            spat.append(np.asarray(t["subj_pat"], np.int32))
+            sval.append(np.asarray(t["subj_val"], np.int32))
+            opat.append(np.asarray(t["obj_pat"], np.int32))
+            oval.append(np.asarray(t["obj_val"], np.int32))
+            # a predicate is a constant-iri term: pattern "iri:<pred>", value 0
+            pid = dictionary.encode_scalar(f"iri:{pred}")
+            ppairs.append(np.full(n, np.int64(pid) << 32, np.int64))
+
+        def cat(chunks, dtype=np.int32):
+            return (
+                np.concatenate(chunks).astype(dtype)
+                if chunks else np.zeros(0, dtype)
+            )
+
+        skey = _pack(cat(spat), cat(sval))
+        pkey = cat(ppairs, np.int64)
+        okey = _pack(cat(opat), cat(oval))
+        n = len(skey)
+        uniq, inv = np.unique(
+            np.concatenate([skey, pkey, okey]), return_inverse=True
+        )
+        inv = inv.astype(np.int32)
+        term_pat = (uniq >> 32).astype(np.int32)
+        term_val = (uniq & 0x7FFFFFFF).astype(np.int32)
+        return cls.build(
+            dictionary, term_pat, term_val,
+            inv[:n], inv[n : 2 * n], inv[2 * n :],
+        )
+
+    @classmethod
+    def build(
+        cls, dictionary, term_pat, term_val, s, p, o,
+        perms: dict[str, np.ndarray] | None = None,
+    ) -> "TripleStore":
+        """Assemble the store; sort the three permutations with jax unless
+        ``perms`` provides them (the ``.kgz`` load path — gather only)."""
+        cols = (s, p, o)
+        indexes: dict[str, Index] = {}
+        for order, (a, b, c) in ORDERS.items():
+            if perms is not None:
+                perm = perms[order]
+            else:
+                perm = np.asarray(
+                    _lexsort3(
+                        jnp.asarray(cols[a]), jnp.asarray(cols[b]),
+                        jnp.asarray(cols[c]),
+                    ),
+                    dtype=np.int32,
+                )
+            indexes[order] = Index(
+                order=order,
+                perm=perm,
+                cols=(cols[a][perm], cols[b][perm], cols[c][perm]),
+            )
+        return cls(
+            dictionary=dictionary,
+            term_pat=np.asarray(term_pat, np.int32),
+            term_val=np.asarray(term_val, np.int32),
+            s=np.asarray(s, np.int32), p=np.asarray(p, np.int32),
+            o=np.asarray(o, np.int32),
+            indexes=indexes,
+        )
+
+    # -- basics --------------------------------------------------------------
+
+    @property
+    def n_triples(self) -> int:
+        return len(self.s)
+
+    @property
+    def n_terms(self) -> int:
+        return len(self.term_pat)
+
+    def device_cols(self, order: str) -> tuple:
+        """Index columns as device arrays (cached) for the jitted scans."""
+        if order not in self._dev:
+            self._dev[order] = tuple(
+                jnp.asarray(c) for c in self.indexes[order].cols
+            )
+        return self._dev[order]
+
+    # -- term decode / encode ------------------------------------------------
+
+    def decode_term(self, term_id: int) -> str:
+        return render_term(
+            self.dictionary, int(self.term_pat[term_id]), int(self.term_val[term_id])
+        )
+
+    def term_id(self, rendered: str) -> int | None:
+        """Rendered N-Triples term string -> term id (None if absent).  The
+        reverse map is rendered once, lazily, on first constant lookup."""
+        if self._term_ids is None:
+            self._term_ids = {
+                self.decode_term(i): i for i in range(self.n_terms)
+            }
+        return self._term_ids.get(rendered)
+
+    def iter_ntriples(self):
+        """Render in SPO index order (deterministic, sorted by term id)."""
+        perm = self.indexes["spo"].perm
+        for row in perm:
+            yield (
+                f"{self.decode_term(self.s[row])} "
+                f"{self.decode_term(self.p[row])} "
+                f"{self.decode_term(self.o[row])} ."
+            )

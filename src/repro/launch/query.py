@@ -1,0 +1,75 @@
+"""Query driver — serve answers from a ``.kgz`` triple-store snapshot.
+
+    PYTHONPATH=src python -m repro.launch.query \
+        --kg out.kgz '?s <http://repro.org/vocab/gene_name> ?o' [--limit 20]
+
+    # conjunctive BGP: patterns separated by ' . ' inside one argument,
+    # or passed as multiple arguments
+    PYTHONPATH=src python -m repro.launch.query --kg out.kgz \
+        '?m <http://repro.org/vocab/has_exon> ?e . ?e <p> ?v'
+
+    # serving throughput (batched single-pattern path)
+    PYTHONPATH=src python -m repro.launch.query --kg out.kgz --bench
+
+Build the snapshot with ``python -m repro.launch.rdfize ... --emit kgz``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kg", required=True, help=".kgz snapshot path")
+    ap.add_argument("pattern", nargs="*", help="triple pattern(s): ?var <iri> \"literal\"")
+    ap.add_argument("--limit", type=int, default=None, help="max rows printed")
+    ap.add_argument("--bench", action="store_true",
+                    help="measure batched single-pattern queries/s")
+    ap.add_argument("--bench-queries", type=int, default=50_000)
+    ap.add_argument("--bench-batch", type=int, default=4096)
+    ap.add_argument("--json", default=None,
+                    help="also write the bench report to this path")
+    args = ap.parse_args()
+
+    from repro.kg import decode_bindings, parse_bgp, persist, solve
+
+    store = persist.load(args.kg)
+    print(
+        f"[query] {store.n_triples} triples, {store.n_terms} terms "
+        f"from {args.kg}",
+        file=sys.stderr,
+    )
+
+    if args.bench:
+        from repro.kg.bench import bench_single_pattern
+
+        report = bench_single_pattern(
+            store, n_queries=args.bench_queries, batch=args.bench_batch
+        )
+        print(f"[query] {report['queries_per_s']:.0f} single-pattern queries/s "
+              f"({report['n_queries']} queries, batch={report['batch']})",
+              file=sys.stderr)
+        print(json.dumps(report, indent=2))
+        if args.json:
+            with open(args.json, "w", encoding="utf-8") as f:
+                json.dump(report, f, indent=2)
+        return
+
+    if not args.pattern:
+        ap.error("provide at least one triple pattern (or --bench)")
+    patterns = parse_bgp(" . ".join(args.pattern))
+    bindings = solve(store, patterns)
+    rows = decode_bindings(store, bindings, limit=args.limit)
+    variables = list(bindings.cols)
+    print("\t".join(variables))
+    for row in rows:
+        print("\t".join(row[v] for v in variables))
+    shown = f" (showing {len(rows)})" if len(rows) < bindings.n else ""
+    print(f"[query] {bindings.n} solutions{shown}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

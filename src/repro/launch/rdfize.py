@@ -3,7 +3,11 @@
     PYTHONPATH=src python -m repro.launch.rdfize \
         --mapping mappings.ttl --data-root data/ --out kg.nt \
         [--engine optimized|naive] [--join sorted|hash] \
-        [--stream] [--block-rows N]
+        [--stream] [--block-rows N] [--emit nt|kgz]
+
+``--emit kgz`` writes a queryable ``repro.kg`` triple-store snapshot
+(dictionary + SPO/POS/OSP indexes) instead of N-Triples text; serve it with
+``python -m repro.launch.query --kg out.kgz '?s <p> ?o'``.
 
 ``--stream`` runs the optimized engine on the ``repro.stream`` block
 subsystem: sources are read in ``--block-rows``-row chunks through a lazy
@@ -31,6 +35,9 @@ def main() -> None:
                     help="block-streamed out-of-core ingestion (repro.stream)")
     ap.add_argument("--block-rows", type=int, default=1 << 14,
                     help="rows per streamed block (with --stream)")
+    ap.add_argument("--emit", default="nt", choices=("nt", "kgz"),
+                    help="output format: N-Triples text or a queryable "
+                         "repro.kg .kgz snapshot")
     args = ap.parse_args()
 
     from repro.core.executor import create_kg
@@ -57,8 +64,16 @@ def main() -> None:
             f"phi_naive={int(st.phi_naive()):>14d}"
         )
     if args.out:
-        n = result.write_ntriples(args.out)
-        print(f"[rdfize] wrote {n} triples to {args.out}")
+        if args.emit == "kgz":
+            from repro.kg import persist
+
+            store = result.to_store()
+            persist.save(store, args.out)
+            print(f"[rdfize] wrote {store.n_triples}-triple .kgz snapshot "
+                  f"({store.n_terms} terms) to {args.out}")
+        else:
+            n = result.write_ntriples(args.out)
+            print(f"[rdfize] wrote {n} triples to {args.out}")
 
 
 if __name__ == "__main__":

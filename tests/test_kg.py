@@ -1,0 +1,267 @@
+"""repro.kg: store construction, pattern/BGP queries vs the naive set-scan
+oracle, .kgz persistence, batched counts, and N-Triples escaping."""
+
+import re
+
+import numpy as np
+import pytest
+
+from repro.core.executor import create_kg
+from repro.kg import (
+    binding_set,
+    decode_bindings,
+    escape_literal,
+    match_counts,
+    match_pattern,
+    oracle_solve,
+    parse_bgp,
+    persist,
+    solve,
+    unescape_literal,
+)
+from repro.rml import generator
+from repro.rml.model import (
+    LogicalSource,
+    MappingDocument,
+    PredicateObjectMap,
+    TermMap,
+    TriplesMap,
+)
+
+
+def _tables(tb):
+    tables = {"csv:child.csv": tb.child}
+    if tb.parent is not None:
+        tables["csv:parent.csv"] = tb.parent
+    return tables
+
+
+def _store(kind, n=900, dup=0.5, n_poms=2, seed=7, **cfg):
+    tb = generator.make_testbed(kind, n, dup, n_poms=n_poms, seed=seed)
+    return create_kg(tb.doc, tables=_tables(tb), **cfg).to_store()
+
+
+def _some_terms(store):
+    """A (subject, predicate, object) of an actual triple, rendered."""
+    i = store.n_triples // 3
+    return (
+        store.decode_term(int(store.s[i])),
+        store.decode_term(int(store.p[i])),
+        store.decode_term(int(store.o[i])),
+    )
+
+
+def _preds(store):
+    return sorted({store.decode_term(int(t)) for t in np.unique(store.p)})
+
+
+@pytest.mark.parametrize("kind", ["SOM", "ORM", "OJM"])
+def test_single_patterns_match_oracle_all_masks(kind):
+    store = _store(kind)
+    s, p, o = _some_terms(store)
+    queries = [
+        "?s ?p ?o",
+        f"{s} ?p ?o",
+        f"?s {p} ?o",
+        f"?s ?p {o}",
+        f"{s} {p} ?o",
+        f"?s {p} {o}",
+        f"{s} ?p {o}",
+        f"{s} {p} {o}",
+    ]
+    for q in queries:
+        pats = parse_bgp(q)
+        assert binding_set(store, solve(store, pats)) == oracle_solve(store, pats), q
+
+
+@pytest.mark.parametrize("kind", ["SOM", "ORM", "OJM"])
+def test_bgp_matches_oracle(kind):
+    store = _store(kind, n=600, n_poms=4)
+    preds = _preds(store)
+    s, p, o = _some_terms(store)
+    bgps = [
+        f"?m {preds[0]} ?a . ?m {preds[1]} ?b",
+        f"?m {preds[0]} ?a . ?m {preds[1]} ?b . ?m {preds[-1]} ?c",
+        f"?m ?p ?a . ?m {preds[0]} ?a",       # shared var across slots
+        f"?m {preds[0]} ?a . ?x {preds[0]} ?a . ?x {preds[1]} ?b",  # 3-hop
+    ]
+    if len(preds) >= 4:
+        bgps.append(
+            f"?m {preds[0]} ?a . ?m {preds[1]} ?b . "
+            f"?m {preds[2]} ?c . ?m {preds[3]} ?d"
+        )
+    for q in bgps:
+        pats = parse_bgp(q)
+        eng = binding_set(store, solve(store, pats))
+        assert eng == oracle_solve(store, pats), q
+
+
+def test_disconnected_and_late_connecting_bgp():
+    """Cross-join semantics for genuinely disconnected patterns, and a BGP
+    whose two smallest tables are disconnected until the largest pattern
+    connects them (join order must prefer connected tables)."""
+    store = _store("ORM", n=60, n_poms=2)
+    preds = _preds(store)
+    rdf_type = "<http://www.w3.org/1999/02/22-rdf-syntax-ns#type>"
+    queries = [
+        f"?a {preds[0]} ?x . ?b {preds[1]} ?y",             # disconnected
+        f"?a {rdf_type} ?x . ?b {rdf_type} ?y . ?a {preds[0]} ?b",
+    ]
+    for q in queries:
+        pats = parse_bgp(q)
+        assert binding_set(store, solve(store, pats)) == oracle_solve(store, pats), q
+
+
+def test_repeated_variable_within_pattern():
+    store = _store("SOM")
+    pats = parse_bgp("?x ?p ?x")
+    assert binding_set(store, solve(store, pats)) == oracle_solve(store, pats)
+
+
+def test_unknown_constant_yields_empty():
+    store = _store("SOM", n=200)
+    pats = parse_bgp('?s <http://nowhere.example/p> ?o')
+    b = solve(store, pats)
+    assert b.n == 0 and binding_set(store, b) == set()
+    assert oracle_solve(store, pats) == set()
+
+
+@pytest.mark.parametrize("kind", ["SOM", "OJM"])
+def test_streamed_store_answers_match_eager(kind):
+    """Stores built from eager and streamed runs answer identically (term
+    ids differ between the runs; decoded bindings must not)."""
+    tb = generator.make_testbed(kind, 700, 0.5, n_poms=2, seed=5)
+    eager = create_kg(tb.doc, tables=_tables(tb)).to_store()
+    streamed = create_kg(
+        tb.doc, tables=_tables(tb), stream=True, block_rows=128
+    ).to_store()
+    assert streamed.n_triples == eager.n_triples
+    preds = _preds(eager)
+    assert preds == _preds(streamed)
+    for q in ["?s ?p ?o", f"?s {preds[0]} ?o",
+              f"?m {preds[0]} ?a . ?m {preds[-1]} ?b"]:
+        pats = parse_bgp(q)
+        assert binding_set(streamed, solve(streamed, pats)) == binding_set(
+            eager, solve(eager, pats)
+        ), q
+
+
+@pytest.mark.parametrize("source", ["eager", "stream"])
+def test_kgz_roundtrip_preserves_answers(tmp_path, source):
+    tb = generator.make_testbed("OJM", 500, 0.5, n_poms=2, seed=2)
+    kg = create_kg(tb.doc, tables=_tables(tb), stream=source == "stream")
+    store = kg.to_store()
+    path = str(tmp_path / "kg.kgz")
+    persist.save(store, path)
+    loaded = persist.load(path)
+    assert loaded.n_triples == store.n_triples
+    assert list(loaded.iter_ntriples()) == list(store.iter_ntriples())
+    preds = _preds(store)
+    for q in ["?s ?p ?o", f"?m {preds[0]} ?a . ?m {preds[-1]} ?b"]:
+        pats = parse_bgp(q)
+        assert binding_set(loaded, solve(loaded, pats)) == oracle_solve(store, pats)
+
+
+def test_kgz_version_check(tmp_path):
+    store = _store("SOM", n=50)
+    path = str(tmp_path / "kg.kgz")
+    persist.save(store, path)
+    with np.load(path) as z:
+        members = {k: z[k] for k in z.files}
+    members["meta"] = np.asarray([999, store.n_triples], np.int64)
+    with open(path, "wb") as f:
+        np.savez(f, **members)
+    with pytest.raises(ValueError, match="format v999"):
+        persist.load(path)
+
+
+def test_batched_counts_match_individual_matches():
+    store = _store("ORM", n=400, n_poms=3)
+    rng = np.random.default_rng(0)
+    rows = rng.integers(0, store.n_triples, 128)
+    spo = np.stack([store.s[rows], store.p[rows], store.o[rows]], axis=1)
+    masks = np.asarray(
+        [(1, 1, 0), (0, 1, 1), (1, 0, 0), (0, 0, 1), (1, 0, 1), (0, 1, 0),
+         (1, 1, 1), (0, 0, 0)],
+        np.int32,
+    )[rng.integers(0, 8, 128)]
+    queries = np.where(masks == 1, spo, np.int32(-1)).astype(np.int32)
+    counts = match_counts(store, queries)
+    for q, c in zip(queries, counts):
+        ids = [None if t < 0 else int(t) for t in q]
+        assert len(match_pattern(store, ids)) == c
+        assert c >= 1  # every query was derived from an existing triple
+
+
+# --------------------------------------------------------------------------
+# N-Triples escaping (satellite regression)
+# --------------------------------------------------------------------------
+
+HOSTILE = [
+    'plain',
+    'has "quotes" inside',
+    'back\\slash',
+    'line\nbreak',
+    'carriage\rreturn',
+    'tab\there',
+    'mixed \\ "x" \n\t\r end',
+    'control\x01char and del\x7f',
+]
+
+
+def _hostile_kg():
+    table = {
+        "ID": np.array([f"r{i}" for i in range(len(HOSTILE))], dtype=object),
+        "VAL": np.array(HOSTILE, dtype=object),
+    }
+    tm = TriplesMap(
+        name="T",
+        source=LogicalSource(path="t.csv"),
+        subject=TermMap(template="http://ex.org/r/{ID}"),
+        poms=(
+            PredicateObjectMap(
+                predicate="http://ex.org/v", object_map=TermMap(reference="VAL")
+            ),
+        ),
+    )
+    doc = MappingDocument({"T": tm})
+    return create_kg(doc, tables={"csv:t.csv": table})
+
+
+def test_ntriples_escaping_hostile_literals(tmp_path):
+    kg = _hostile_kg()
+    out = tmp_path / "kg.nt"
+    n = kg.write_ntriples(str(out))
+    assert n == len(HOSTILE)
+    lines = out.read_text(encoding="utf-8").splitlines()
+    # one triple per line: raw newlines/CRs must have been escaped away
+    assert len(lines) == len(HOSTILE)
+    ntriple = re.compile(
+        r'^<[^<>"{}|^`\\\x00-\x20]*> <[^<>"{}|^`\\\x00-\x20]*> '
+        r'"(?:[^"\\\n\r\x00-\x1f]|\\[tbnrf"\'\\]|\\u[0-9A-Fa-f]{4})*" \.$'
+    )
+    for line in lines:
+        assert ntriple.match(line), f"invalid N-Triples line: {line!r}"
+    joined = "\n".join(lines)
+    assert '\\"quotes\\"' in joined
+    assert "back\\\\slash" in joined
+    assert "line\\nbreak" in joined
+    assert "tab\\there" in joined
+    assert "control\\u0001char" in joined
+
+
+def test_escape_unescape_roundtrip():
+    for s in HOSTILE:
+        assert unescape_literal(escape_literal(s)) == s
+
+
+def test_kg_decode_shares_escaping_and_queries_hostile_literals():
+    """The kg decode path renders the same escaped terms, and an escaped
+    literal constant in a query resolves to the right subject."""
+    store = _hostile_kg().to_store()
+    rendered = {t for line in store.iter_ntriples() for t in [line]}
+    assert any("line\\nbreak" in line for line in rendered)
+    pats = parse_bgp('?s <http://ex.org/v> "line\\nbreak"')
+    rows = decode_bindings(store, solve(store, pats))
+    assert rows == [{"?s": "<http://ex.org/r/r3>"}]
+    assert binding_set(store, solve(store, pats)) == oracle_solve(store, pats)
