@@ -32,8 +32,8 @@ from repro.core import hashset
 from repro.core.hashset import next_pow2
 from repro.data import pipeline
 from repro.data.encoder import Dictionary, join_columns
-from repro.kg.terms import render_term
 from repro.data.sources import SourceCache
+from repro.data.terms import render_term
 from repro.rml.model import MappingDocument
 
 

@@ -6,7 +6,8 @@ turns the pair back into a concrete N-Triples term string.  It is shared by
 ``core.executor`` (the N-Triples dump) and ``repro.kg`` (query-time binding
 decode), so both emit byte-identical — and *valid* — N-Triples: literals get
 full string escaping (backslash, quote, and control characters), not just
-``"``.
+``"``.  It lives beside the encoder in ``repro.data`` so the dependency DAG
+stays one-directional (``data`` ← ``core`` ← ``kg``).
 """
 
 from __future__ import annotations

@@ -10,8 +10,9 @@ The creation engine (``repro.core.executor``) stops at a write-only
   evaluation on encoded binding tables via the PJTT join machinery.
 * :mod:`repro.kg.persist` — versioned ``.kgz`` npz snapshots (build once,
   serve many times).
-* :mod:`repro.kg.terms`   — shared term rendering with full N-Triples
-  escaping (also used by the engine's N-Triples dump).
+
+Term rendering (full N-Triples escaping) lives in :mod:`repro.data.terms`,
+shared with the engine's N-Triples dump and re-exported here.
 
 Entry points: ``KGResult.to_store()`` and ``python -m repro.launch.query``.
 """
@@ -30,7 +31,7 @@ from repro.kg.query import (
 )
 from repro.kg.persist import load, save
 from repro.kg.store import TripleStore
-from repro.kg.terms import escape_literal, render_term, unescape_literal
+from repro.data.terms import escape_literal, render_term, unescape_literal
 
 __all__ = [
     "Bindings",

@@ -21,6 +21,8 @@ _MASKS = ((1, 1, 0), (0, 1, 1), (1, 0, 0), (0, 0, 1))
 
 def make_workload(store: TripleStore, n_queries: int, seed: int = 0) -> np.ndarray:
     """int32[n_queries, 3] patterns in (s, p, o) term ids, -1 = wildcard."""
+    if store.n_triples == 0:
+        raise ValueError("cannot build a query workload over an empty graph")
     rng = np.random.default_rng(seed)
     rows = rng.integers(0, store.n_triples, n_queries)
     spo = np.stack([store.s[rows], store.p[rows], store.o[rows]], axis=1)

@@ -24,7 +24,10 @@ import numpy as np
 from repro.data.encoder import Dictionary
 from repro.kg.store import ORDERS, TripleStore
 
-FORMAT_VERSION = 1
+# v2: term ids are canonical by *rendered* term — v1 snapshots may hold the
+# same RDF term under multiple encoding-keyed ids (and duplicate rendered
+# triples), which yields wrong query answers, so they are rejected
+FORMAT_VERSION = 2
 
 
 def save(store: TripleStore, path: str) -> None:
@@ -50,21 +53,96 @@ def save(store: TripleStore, path: str) -> None:
 
 def load(path: str) -> TripleStore:
     with np.load(path) as z:
-        version, _n = (int(x) for x in z["meta"])
+        version, n = (int(x) for x in z["meta"])
         if version != FORMAT_VERSION:
             raise ValueError(
                 f"{path}: kgz format v{version}, this build reads v{FORMAT_VERSION}"
             )
-        blob = z["dict_blob"].tobytes()
+        raw = z["dict_blob"]
         off = z["dict_off"]
+        # a corrupted offset table would silently misalign every decoded
+        # string while all downstream id-range checks still pass
+        if (int(off[-1]) if len(off) else 0) != len(raw) or (
+            len(off) and (off[0] < 0 or np.any(np.diff(off) < 0))
+        ):
+            raise ValueError(
+                f"{path}: dictionary offsets corrupted "
+                "— truncated or corrupted snapshot"
+            )
+        blob = raw.tobytes()
         start = 0
         strings = []
         for end in off:
             strings.append(blob[start:end].decode("utf-8"))
             start = int(end)
-        return TripleStore.build(
+        s, p, o = z["s"], z["p"], z["o"]
+        if not (len(s) == len(p) == len(o) == n):
+            raise ValueError(
+                f"{path}: triple columns disagree with meta n_triples={n} "
+                "— truncated or corrupted snapshot"
+            )
+        term_pat, term_val = z["term_pat"], z["term_val"]
+        if len(term_pat) != len(term_val):
+            raise ValueError(
+                f"{path}: term_pat/term_val lengths disagree "
+                "— truncated or corrupted snapshot"
+            )
+        # out-of-range ids would decode garbage terms (Python negative
+        # indexing wraps silently) rather than fail
+        for name, col, hi in (
+            ("s", s, len(term_pat)),
+            ("p", p, len(term_pat)),
+            ("o", o, len(term_pat)),
+            ("term_pat", term_pat, len(strings)),
+            ("term_val", term_val, len(strings)),
+        ):
+            if len(col) and (col.min() < 0 or col.max() >= hi):
+                raise ValueError(
+                    f"{path}: {name} ids out of range [0, {hi}) "
+                    "— truncated or corrupted snapshot"
+                )
+        perms = {}
+        for order in ORDERS:
+            perm = z[f"perm_{order}"]
+            # a bad permutation (wrong length, out-of-range, or repeated row)
+            # would gather garbage and answer queries silently wrong; bound
+            # the values before bincount so a huge bogus entry raises here
+            # instead of allocating a giant count array
+            if len(perm) != n or (
+                n
+                and (
+                    perm.min() < 0
+                    or perm.max() >= n
+                    or not np.array_equal(
+                        np.bincount(perm, minlength=n), np.ones(n, np.int64)
+                    )
+                )
+            ):
+                raise ValueError(
+                    f"{path}: perm_{order} is not a permutation of {n} rows "
+                    "— truncated or corrupted snapshot"
+                )
+            perms[order] = perm
+        store = TripleStore.build(
             Dictionary.from_strings(strings),
-            z["term_pat"], z["term_val"],
-            z["s"], z["p"], z["o"],
-            perms={order: z[f"perm_{order}"] for order in ORDERS},
+            term_pat, term_val, s, p, o, perms=perms,
         )
+    # load gathers instead of re-sorting, so verify each gathered index really
+    # is lexicographically non-decreasing (cheap vectorized spot-check)
+    for order, idx in store.indexes.items():
+        c0, c1, c2 = idx.cols
+        sorted_ok = np.all(
+            (c0[:-1] < c0[1:])
+            | (
+                (c0[:-1] == c0[1:])
+                & (
+                    (c1[:-1] < c1[1:])
+                    | ((c1[:-1] == c1[1:]) & (c2[:-1] <= c2[1:]))
+                )
+            )
+        )
+        if not bool(sorted_ok):
+            raise ValueError(
+                f"{path}: index {order} is not sorted — corrupted snapshot"
+            )
+    return store

@@ -38,7 +38,7 @@ import numpy as np
 from repro.core import pjtt
 from repro.core.hashset import next_pow2
 from repro.kg.store import ORDERS, TripleStore
-from repro.kg.terms import canonical_term
+from repro.data.terms import canonical_term
 
 I32_MAX = np.int32(np.iinfo(np.int32).max)
 
@@ -186,24 +186,28 @@ def match_ranges(
 ) -> tuple[np.ndarray, np.ndarray, list[str]]:
     """Batch of patterns as int32[m, 3] term ids in (s, p, o) order with -1
     for wildcards -> per-pattern (start, end) ranges plus the index order
-    each range refers to.  Queries are grouped by bound mask, one jitted
-    dispatch per distinct mask (a homogeneous serving batch is exactly one
-    dispatch)."""
+    each range refers to.  Queries are grouped by *index order* — the
+    wildcard bound encoding already distinguishes masks within an order, so
+    a mixed batch takes at most 3 jitted dispatches (a homogeneous serving
+    batch is exactly one)."""
     q = np.asarray(patterns_spo, np.int32).reshape(-1, 3)
     m = len(q)
     starts = np.zeros(m, np.int64)
     ends = np.zeros(m, np.int64)
-    orders = [""] * m
     bound = q >= 0
-    masks = {tuple(bool(x) for x in row) for row in bound}
-    for mask in masks:
-        sel = np.nonzero((bound == np.asarray(mask)).all(axis=1))[0]
-        order = _ORDER_FOR_MASK[mask]
+    orders = [_ORDER_FOR_MASK[tuple(bool(x) for x in row)] for row in bound]
+    if len(store.s) == 0:
+        # empty graph: every range is (0, 0) — the jitted search cannot
+        # gather from zero-length index columns
+        return starts, ends, orders
+    orders_arr = np.asarray(orders)
+    for order in sorted(set(orders)):
+        sel = np.nonzero(orders_arr == order)[0]
         a, b, c = (q[sel][:, i] for i in ORDERS[order])
         qcols = np.stack([a, b, c], axis=1)
-        # pad each mask group to a power-of-two batch so mixed-mask batches
-        # compile O(log batch) shapes total, not one per group size; pad
-        # rows are all-wildcard queries whose results are sliced away
+        # pad each group to a power-of-two batch so mixed batches compile
+        # O(log batch) shapes total, not one per group size; pad rows are
+        # all-wildcard queries whose results are sliced away
         k = len(sel)
         npad = next_pow2(max(k, 1))
         if npad > k:
@@ -219,8 +223,6 @@ def match_ranges(
         )
         starts[sel] = np.asarray(lo_i)[:k]
         ends[sel] = np.asarray(hi_i)[:k]
-        for i in sel:
-            orders[i] = order
     return starts, ends, orders
 
 
@@ -331,7 +333,11 @@ def _join(a: Bindings, b: Bindings) -> Bindings:
     spans = np.searchsorted(skeys, pkeys, side="right") - np.searchsorted(
         skeys, pkeys, side="left"
     )
-    max_matches = max(int(spans.max()) if len(spans) else 0, 1)
+    # max_matches is a static jit arg: round the exact build-side span up to
+    # a power of two so repeated joins compile O(log n) shapes, not one per
+    # distinct multiplicity (the truncation assert below stays valid — the
+    # padded width can only be wider than the exact one)
+    max_matches = next_pow2(max(int(spans.max()) if len(spans) else 0, 1))
     srows, valid, trunc = _probe_rows(
         jnp.asarray(skeys),
         jnp.asarray(np.argsort(bkeys, kind="stable").astype(np.int32)),

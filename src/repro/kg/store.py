@@ -15,8 +15,12 @@ Every one of the 8 triple-pattern bound-position masks is a contiguous row
 range of exactly one of these orders, so a pattern match is a pair of
 (vectorized, jittable) lexicographic binary searches — see ``repro.kg.query``.
 The permutations are built with jax stable argsorts; construction from a
-``KGResult`` is array-at-a-time over the existing int32 columns (strings are
-decoded only at output time, never during build or query).
+``KGResult`` is array-at-a-time over the existing int32 columns.  Term
+*identity* is the rendered RDF term, not the engine encoding: distinct
+(pattern, value) pairs that render to the same term (a constant object map
+``lit:hello`` vs. a reference column holding ``hello``) are collapsed to one
+term id during construction — each distinct term is rendered exactly once for
+that, and never again during query (decode happens only at output time).
 """
 
 from __future__ import annotations
@@ -29,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.encoder import Dictionary
-from repro.kg.terms import render_term
+from repro.data.terms import render_term
 
 # index order -> the (primary, secondary, tertiary) triple positions
 ORDERS: dict[str, tuple[int, int, int]] = {
@@ -83,7 +87,8 @@ class TripleStore:
         cls, dictionary: Dictionary, triples: dict[str, dict[str, np.ndarray]]
     ) -> "TripleStore":
         """Build from engine output (``KGResult.dictionary`` /
-        ``KGResult.triples``) without rendering a single term string."""
+        ``KGResult.triples``); each distinct term is rendered once to
+        canonicalize term identity by rendered string."""
         spat, sval, ppairs, opat, oval = [], [], [], [], []
         for pred, t in triples.items():
             n = len(t["subj_val"])
@@ -108,13 +113,39 @@ class TripleStore:
         uniq, inv = np.unique(
             np.concatenate([skey, pkey, okey]), return_inverse=True
         )
-        inv = inv.astype(np.int32)
         term_pat = (uniq >> 32).astype(np.int32)
         term_val = (uniq & 0x7FFFFFFF).astype(np.int32)
-        return cls.build(
-            dictionary, term_pat, term_val,
-            inv[:n], inv[n : 2 * n], inv[2 * n :],
+        # Term identity is the *rendered* term: distinct encodings can render
+        # to the same RDF term (constant 'lit:hello' vs. reference 'lit:{}'
+        # over the value 'hello'), and leaving them as separate ids makes
+        # constant-bound queries match only one encoding and breaks variable
+        # unification across encodings in BGP joins.  Collapse colliding
+        # encodings to one canonical id (ids come out sorted by rendered
+        # string) and drop the duplicate triples the merge exposes.
+        rendered = np.array(
+            [
+                render_term(dictionary, int(p), int(v))
+                for p, v in zip(term_pat, term_val)
+            ]
         )
+        uniq_rendered, first, remap = np.unique(
+            rendered, return_index=True, return_inverse=True
+        )
+        term_pat = term_pat[first]
+        term_val = term_val[first]
+        inv = remap[inv].astype(np.int32)
+        trip = np.unique(
+            np.stack([inv[:n], inv[n : 2 * n], inv[2 * n :]], axis=1), axis=0
+        )
+        store = cls.build(
+            dictionary, term_pat, term_val,
+            trip[:, 0], trip[:, 1], trip[:, 2],
+        )
+        # term id i IS the rank of its rendered string in uniq_rendered, so
+        # the reverse map term_id() would otherwise re-render lazily is
+        # already in hand — seed it
+        store._term_ids = {str(r): i for i, r in enumerate(uniq_rendered)}
+        return store
 
     @classmethod
     def build(

@@ -44,6 +44,8 @@ def main() -> None:
     )
 
     if args.bench:
+        if store.n_triples == 0:
+            ap.error(f"{args.kg} holds an empty graph: nothing to benchmark")
         from repro.kg.bench import bench_single_pattern
 
         report = bench_single_pattern(

@@ -118,6 +118,18 @@ def test_repeated_variable_within_pattern():
     assert binding_set(store, solve(store, pats)) == oracle_solve(store, pats)
 
 
+def test_empty_store_queries_return_no_solutions():
+    from repro.data.encoder import Dictionary
+    from repro.kg.store import TripleStore
+
+    store = TripleStore.from_kg(Dictionary.from_strings([]), {})
+    assert store.n_triples == 0 and store.n_terms == 0
+    assert match_counts(store, np.full((4, 3), -1, np.int32)).tolist() == [0] * 4
+    pats = parse_bgp('?s ?p ?o . ?s <http://nowhere.example/p> "x"')
+    assert solve(store, pats).n == 0
+    assert oracle_solve(store, pats) == set()
+
+
 def test_unknown_constant_yields_empty():
     store = _store("SOM", n=200)
     pats = parse_bgp('?s <http://nowhere.example/p> ?o')
@@ -162,6 +174,74 @@ def test_kgz_roundtrip_preserves_answers(tmp_path, source):
         assert binding_set(loaded, solve(loaded, pats)) == oracle_solve(store, pats)
 
 
+def _overlap_kg():
+    """Mapping whose constant maps render to the same terms as reference /
+    template maps: 'hello' appears both as a constant-literal object and as
+    a reference column value (under the *same* predicate, so the rendered
+    triple itself collides too), and a constant-IRI object equals one of the
+    template-built subjects."""
+    table = {
+        "ID": np.array(["r0", "r1", "r2"], dtype=object),
+        "VAL": np.array(["hello", "world", "hello"], dtype=object),
+    }
+    tm = TriplesMap(
+        name="T",
+        source=LogicalSource(path="t.csv"),
+        subject=TermMap(template="http://ex.org/r/{ID}"),
+        poms=(
+            PredicateObjectMap(
+                predicate="http://ex.org/v", object_map=TermMap(reference="VAL")
+            ),
+            PredicateObjectMap(
+                predicate="http://ex.org/v", object_map=TermMap(constant="hello")
+            ),
+            PredicateObjectMap(
+                predicate="http://ex.org/w",
+                object_map=TermMap(constant="http://ex.org/r/r1"),
+            ),
+        ),
+    )
+    doc = MappingDocument({"T": tm})
+    return create_kg(doc, tables={"csv:t.csv": table})
+
+
+def test_term_identity_is_rendered_term_across_encodings(tmp_path):
+    """The same RDF term produced via different encodings (constant vs
+    reference/template) must get ONE term id: constant-bound queries see all
+    matching triples, joins unify across encodings, and the rendered-triple
+    duplicates collapse (regression for encoding-keyed term identity)."""
+    store = _overlap_kg().to_store()
+    # r0/r1/r2 each get <v> "hello" via the constant POM; r0 and r2 repeat it
+    # via VAL — as a set that is 3 triples, plus "world" and the 3 <w> ones
+    assert store.n_triples == 7
+    rendered = [store.decode_term(i) for i in range(store.n_terms)]
+    assert len(rendered) == len(set(rendered))  # one id per rendered term
+    assert rendered.count('"hello"') == 1
+    assert sorted(store.iter_ntriples()) == sorted(set(store.iter_ntriples()))
+    queries = [
+        '?s <http://ex.org/v> "hello"',      # constant must match both encodings
+        '?s ?p "hello"',
+        '?s <http://ex.org/v> ?o',
+        '<http://ex.org/r/r1> ?p ?o',
+        # join: ?b bound from a constant-IRI object must unify with the
+        # template-encoded subject of the <v> patterns
+        '?a <http://ex.org/w> ?b . ?b <http://ex.org/v> ?c',
+    ]
+    for q in queries:
+        pats = parse_bgp(q)
+        assert binding_set(store, solve(store, pats)) == oracle_solve(store, pats), q
+    pats = parse_bgp('?s <http://ex.org/v> "hello"')
+    assert solve(store, pats).n == 3
+    # the canonical store round-trips through .kgz unchanged
+    path = str(tmp_path / "kg.kgz")
+    persist.save(store, path)
+    loaded = persist.load(path)
+    assert list(loaded.iter_ntriples()) == list(store.iter_ntriples())
+    for q in queries:
+        pats = parse_bgp(q)
+        assert binding_set(loaded, solve(loaded, pats)) == oracle_solve(store, pats), q
+
+
 def test_kgz_version_check(tmp_path):
     store = _store("SOM", n=50)
     path = str(tmp_path / "kg.kgz")
@@ -173,6 +253,69 @@ def test_kgz_version_check(tmp_path):
         np.savez(f, **members)
     with pytest.raises(ValueError, match="format v999"):
         persist.load(path)
+
+
+def test_kgz_rejects_corrupted_snapshots(tmp_path):
+    """A truncated or corrupted permutation must fail loudly at load, never
+    silently answer queries wrongly."""
+    store = _store("SOM", n=80)
+    path = str(tmp_path / "kg.kgz")
+    persist.save(store, path)
+    with np.load(path) as z:
+        members = {k: z[k] for k in z.files}
+
+    def rewrite(**overrides):
+        with open(path, "wb") as f:
+            np.savez(f, **{**members, **overrides})
+
+    # truncated permutation
+    rewrite(perm_spo=members["perm_spo"][:-1])
+    with pytest.raises(ValueError, match="perm_spo"):
+        persist.load(path)
+    # repeated row (still right length, but not a bijection)
+    bad = members["perm_osp"].copy()
+    bad[0] = bad[1]
+    rewrite(perm_osp=bad)
+    with pytest.raises(ValueError, match="perm_osp"):
+        persist.load(path)
+    # huge bogus index (must raise cleanly, not allocate a giant bincount)
+    bad = members["perm_spo"].copy()
+    bad[0] = np.int32(2**31 - 1)
+    rewrite(perm_spo=bad)
+    with pytest.raises(ValueError, match="perm_spo"):
+        persist.load(path)
+    # valid permutation, wrong order: gathered index is unsorted
+    rewrite(perm_pos=members["perm_pos"][::-1])
+    with pytest.raises(ValueError, match="pos is not sorted"):
+        persist.load(path)
+    # truncated triple column vs meta
+    rewrite(s=members["s"][:-1])
+    with pytest.raises(ValueError, match="n_triples"):
+        persist.load(path)
+    # out-of-range term ids would decode garbage via negative indexing
+    bad = members["s"].copy()
+    bad[0] = -3
+    rewrite(s=bad)
+    with pytest.raises(ValueError, match="s ids out of range"):
+        persist.load(path)
+    bad = members["term_val"].copy()
+    bad[0] = np.int32(len(members["dict_off"]))
+    rewrite(term_val=bad)
+    with pytest.raises(ValueError, match="term_val ids out of range"):
+        persist.load(path)
+    # non-monotonic string offsets would misalign every decoded term
+    bad = members["dict_off"].copy()
+    bad[0] = bad[-1] + 1
+    rewrite(dict_off=bad)
+    with pytest.raises(ValueError, match="dictionary offsets"):
+        persist.load(path)
+    # pre-canonicalization v1 snapshots may answer queries wrongly: rejected
+    rewrite(meta=np.asarray([1, store.n_triples], np.int64))
+    with pytest.raises(ValueError, match="format v1"):
+        persist.load(path)
+    # pristine members still load
+    rewrite()
+    assert persist.load(path).n_triples == store.n_triples
 
 
 def test_batched_counts_match_individual_matches():
