@@ -244,6 +244,34 @@ def bench_kg(json_dir: str = ".") -> None:
     _write_json(json_dir, "BENCH_kg.json", report)
 
 
+def bench_serve(json_dir: str = ".") -> None:
+    """The ``repro.serve`` pipeline benchmark on the same 100K-row testbed
+    store as the ``kg`` section (numbers directly comparable): end-to-end
+    queries/s through the fused jitted executor for point lookups, a
+    3-pattern star BGP, and an OPTIONAL+FILTER query, each at batch sizes
+    1/64/4096.  Writes ``BENCH_serve.json``."""
+    from repro.core.executor import create_kg
+    from repro.rml import generator
+    from repro.serve.bench import bench_serve as run_serve_bench
+
+    n = 100_000
+    tb = generator.make_testbed("SOM", n, 0.75, n_poms=2, seed=0)
+    tables = {"csv:child.csv": tb.child}
+    if tb.parent is not None:
+        tables["csv:parent.csv"] = tb.parent
+    store = create_kg(tb.doc, tables=tables).to_store()
+    report = run_serve_bench(store)
+    report["testbed_rows"] = n
+    for name, cls in report["classes"].items():
+        for batch, r in cls["batches"].items():
+            _row(
+                f"serve/{name}-b{batch}",
+                r["wall_s"] / r["n_queries"] * 1e6,
+                f"queries_per_s={r['queries_per_s']:.0f}",
+            )
+    _write_json(json_dir, "BENCH_serve.json", report)
+
+
 def bench_roofline() -> None:
     from benchmarks import roofline
 
@@ -267,7 +295,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     choices=(None, "fig56", "opmodel", "kernels", "dedup",
-                             "stream", "kg", "roofline"))
+                             "stream", "kg", "serve", "roofline"))
     ap.add_argument("--json-dir", default=".",
                     help="where BENCH_*.json reports are written")
     args = ap.parse_args()
@@ -280,6 +308,7 @@ def main() -> None:
         "dedup": bench_dedup_gather,
         "stream": lambda: bench_stream(args.json_dir),
         "kg": lambda: bench_kg(args.json_dir),
+        "serve": lambda: bench_serve(args.json_dir),
         "roofline": bench_roofline,
     }
     for name, fn in sections.items():

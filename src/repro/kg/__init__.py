@@ -6,10 +6,11 @@ The creation engine (``repro.core.executor``) stops at a write-only
 * :mod:`repro.kg.store`   — immutable dictionary-encoded int32 ``(s, p, o)``
   columns with SPO/POS/OSP sorted permutation indexes (jax stable sorts).
 * :mod:`repro.kg.query`   — jitted lexicographic range scans for single
-  triple patterns (batched, many queries per dispatch) and conjunctive BGP
-  evaluation on encoded binding tables via the PJTT join machinery.
+  triple patterns (batched, many queries per dispatch); conjunctive BGP
+  evaluation delegates to the ``repro.serve`` planner + fused jitted
+  executor (one query path, shared with the query server).
 * :mod:`repro.kg.persist` — versioned ``.kgz`` npz snapshots (build once,
-  serve many times).
+  serve many times) and the ``open_store`` cache for long-lived processes.
 
 Term rendering (full N-Triples escaping) lives in :mod:`repro.data.terms`,
 shared with the engine's N-Triples dump and re-exported here.
@@ -29,7 +30,7 @@ from repro.kg.query import (
     solve,
     solve_text,
 )
-from repro.kg.persist import load, save
+from repro.kg.persist import load, open_store, save
 from repro.kg.store import TripleStore
 from repro.data.terms import escape_literal, render_term, unescape_literal
 
@@ -42,6 +43,7 @@ __all__ = [
     "escape_literal",
     "load",
     "match_counts",
+    "open_store",
     "match_pattern",
     "oracle_solve",
     "parse_bgp",

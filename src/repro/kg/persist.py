@@ -19,6 +19,9 @@ member          dtype      contents
 
 from __future__ import annotations
 
+import os
+from collections import OrderedDict
+
 import numpy as np
 
 from repro.data.encoder import Dictionary
@@ -49,6 +52,30 @@ def save(store: TripleStore, path: str) -> None:
         members[f"perm_{order}"] = store.indexes[order].perm
     with open(path, "wb") as f:
         np.savez(f, **members)
+
+
+_OPEN_STORES: OrderedDict[tuple, TripleStore] = OrderedDict()
+_OPEN_STORES_MAX = 4
+
+
+def open_store(path: str) -> TripleStore:
+    """Cached :func:`load`: the validated store (with its device index
+    copies, lazy term maps, value tables and compiled query pipelines) is
+    keyed by ``(realpath, mtime, size)``, so repeated CLI/server phases —
+    and every client of a long-lived process — reuse one open store
+    instead of re-reading and re-validating the snapshot.  A rewritten
+    file changes the key and reloads; a small LRU bounds resident stores."""
+    st = os.stat(path)
+    key = (os.path.realpath(path), st.st_mtime_ns, st.st_size)
+    store = _OPEN_STORES.get(key)
+    if store is None:
+        store = load(path)
+        _OPEN_STORES[key] = store
+        while len(_OPEN_STORES) > _OPEN_STORES_MAX:
+            _OPEN_STORES.popitem(last=False)
+    else:
+        _OPEN_STORES.move_to_end(key)
+    return store
 
 
 def load(path: str) -> TripleStore:

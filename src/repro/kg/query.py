@@ -12,30 +12,31 @@ strictly between the two).
 
 BGP (conjunctive) queries
 -------------------------
-`solve` evaluates each pattern to an encoded *binding table* (int32 term-id
-columns, one per variable), orders tables by cardinality, and folds them
-with the engine's own PJTT sorted-merge machinery: the smaller table's
-shared-variable column becomes the PJTT key with *row indices* as payload,
-the probe's padded-ragged result expands to matched row pairs, and residual
-shared variables filter by equality.  Term ids decode to strings only at
-output (`decode_bindings`).
+`solve` delegates to the ``repro.serve`` planner/executor — the one query
+path: the BGP becomes a :class:`~repro.serve.algebra.SelectQuery`, the
+cost-based planner orders scans by index-measured cardinality preferring
+connected joins, and the jitted executor runs the whole plan (range scans
+feeding sorted-merge joins on padded binding tables) as one fused device
+dispatch; bindings never materialize on host between joins.  Rows come
+back deterministically ordered by term id — and term ids are ranks of
+rendered terms, so the order is identical across eager / streamed /
+``.kgz``-roundtripped stores.  Term ids decode to strings only at output
+(`decode_bindings`).
 
 Correctness is anchored by `oracle_solve`, a naive Python set-scan over the
-same store, used by the tests as the reference semantics.
+same store, used by the tests as the reference semantics (the full-algebra
+extension lives in ``repro.serve.oracle``).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import itertools
 import re
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import pjtt
 from repro.core.hashset import next_pow2
 from repro.kg.store import ORDERS, TripleStore
 from repro.data.terms import canonical_term
@@ -244,7 +245,7 @@ def match_pattern(store: TripleStore, spo_ids) -> np.ndarray:
 
 
 # --------------------------------------------------------------------------
-# binding tables + PJTT joins
+# binding tables + BGP evaluation (delegated to the repro.serve pipeline)
 # --------------------------------------------------------------------------
 
 
@@ -262,122 +263,22 @@ class Bindings:
         return tuple(self.cols)
 
 
-@partial(jax.jit, static_argnums=(3,))
-def _probe_rows(skeys, srows, child_keys, max_matches):
-    pr = pjtt.probe_sorted(pjtt.PJTTSorted(skeys, srows), child_keys, max_matches)
-    return pr.subjects, pr.valid, pr.truncated
-
-
-def _pattern_bindings(store: TripleStore, pat: TriplePattern) -> Bindings:
-    """Evaluate one pattern to a binding table (with same-variable equality
-    applied for patterns like ``?x <p> ?x``)."""
-    ids: list[int | None] = []
-    for t in pat.slots:
-        if t.startswith("?"):
-            ids.append(None)
-        else:
-            tid = store.term_id(t)
-            if tid is None:  # constant not in the graph: empty result
-                return Bindings({v: np.zeros(0, np.int32) for v in pat.variables}, 0)
-            ids.append(tid)
-    rows = match_pattern(store, ids)
-    triple_cols = (store.s, store.p, store.o)
-    cols: dict[str, np.ndarray] = {}
-    keep = np.ones(len(rows), bool)
-    for slot, term in zip(range(3), pat.slots):
-        if not term.startswith("?"):
-            continue
-        col = triple_cols[slot][rows]
-        if term in cols:  # repeated variable inside one pattern
-            keep &= cols[term] == col
-        else:
-            cols[term] = col
-    if not keep.all():
-        cols = {v: c[keep] for v, c in cols.items()}
-    n = int(keep.sum()) if cols else len(rows)
-    if not cols:
-        # all-constant pattern: existence filter
-        return Bindings({}, min(n, 1))
-    return Bindings(cols, n)
-
-
-def _cross_join(a: Bindings, b: Bindings) -> Bindings:
-    ia = np.repeat(np.arange(a.n), b.n)
-    ib = np.tile(np.arange(b.n), a.n)
-    cols = {v: c[ia] for v, c in a.cols.items()}
-    cols.update({v: c[ib] for v, c in b.cols.items()})
-    return Bindings(cols, a.n * b.n)
-
-
-def _join(a: Bindings, b: Bindings) -> Bindings:
-    """Natural join on shared variables via the PJTT sorted-merge index:
-    build over the smaller side keyed on the first shared variable with row
-    indices as payload, probe with the larger side, expand the padded
-    result, then filter residual shared variables by equality."""
-    if a.n == 0 or b.n == 0:
-        cols = {v: np.zeros(0, np.int32) for v in {**a.cols, **b.cols}}
-        return Bindings(cols, 0)
-    # existence filters (zero-variable tables, n >= 1 here): keep the other side
-    if not a.cols:
-        return Bindings(dict(b.cols), b.n)
-    if not b.cols:
-        return Bindings(dict(a.cols), a.n)
-    shared = [v for v in a.cols if v in b.cols]
-    if not shared:
-        return _cross_join(a, b)
-    build, probe = (a, b) if a.n <= b.n else (b, a)
-    key = shared[0]
-    bkeys = build.cols[key]
-    skeys = np.sort(bkeys)
-    pkeys = probe.cols[key]
-    spans = np.searchsorted(skeys, pkeys, side="right") - np.searchsorted(
-        skeys, pkeys, side="left"
-    )
-    # max_matches is a static jit arg: round the exact build-side span up to
-    # a power of two so repeated joins compile O(log n) shapes, not one per
-    # distinct multiplicity (the truncation assert below stays valid — the
-    # padded width can only be wider than the exact one)
-    max_matches = next_pow2(max(int(spans.max()) if len(spans) else 0, 1))
-    srows, valid, trunc = _probe_rows(
-        jnp.asarray(skeys),
-        jnp.asarray(np.argsort(bkeys, kind="stable").astype(np.int32)),
-        jnp.asarray(pkeys),
-        max_matches,
-    )
-    assert not bool(trunc), "PJTT probe truncated despite exact span sizing"
-    srows = np.asarray(srows)
-    valid = np.asarray(valid)
-    prow, k = np.nonzero(valid)
-    brow = srows[prow, k]
-    keep = np.ones(len(prow), bool)
-    for v in shared[1:]:
-        keep &= build.cols[v][brow] == probe.cols[v][prow]
-    prow, brow = prow[keep], brow[keep]
-    cols = {v: c[brow] for v, c in build.cols.items()}
-    cols.update({v: c[prow] for v, c in probe.cols.items() if v not in cols})
-    return Bindings(cols, len(prow))
-
-
 def solve(store: TripleStore, patterns: list[TriplePattern]) -> Bindings:
-    """Conjunctive BGP evaluation: per-pattern binding tables folded
-    smallest-first, but always preferring a table *connected* to the
-    accumulated result (shares a variable) — a disconnected pair would
-    cross-join, and the product must be deferred until no join key is
-    available at all."""
-    tables = [_pattern_bindings(store, p) for p in patterns]
-    tables.sort(key=lambda t: t.n)
-    out = tables.pop(0)
-    while tables:
-        i = next(
-            (
-                j for j, t in enumerate(tables)
-                if not t.cols or not out.cols
-                or any(v in out.cols for v in t.cols)
-            ),
-            0,  # nothing connected: cross-join the smallest remaining
-        )
-        out = _join(out, tables.pop(i))
-    return out
+    """Conjunctive BGP evaluation through the ``repro.serve``
+    planner/executor — the same fused jitted pipeline the query server
+    runs: scans ordered by index-measured cardinality (connected joins
+    preferred), sorted-merge joins on padded device binding tables, rows
+    deterministically sorted by term id.  (Lazy import: ``serve`` layers on
+    ``kg``, not the other way around.)"""
+    from repro.serve.algebra import SelectQuery
+    from repro.serve.exec import solve_select
+
+    res = solve_select(store, SelectQuery(patterns=tuple(patterns)))
+    n = int(res.counts[0])
+    cols = {
+        v: np.asarray(res.cols[v][0, :n], np.int32) for v in res.vars
+    }
+    return Bindings(cols, n)
 
 
 def solve_text(store: TripleStore, text: str) -> Bindings:

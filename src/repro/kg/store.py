@@ -148,6 +148,57 @@ class TripleStore:
         return store
 
     @classmethod
+    def from_ntriples(
+        cls, triples: "list[tuple[str, str, str]]"
+    ) -> "TripleStore":
+        """Build a store from rendered N-Triples terms (``<iri>`` /
+        ``'"literal"'`` strings) — the test/tooling path for small ad-hoc
+        graphs.  Term ids come out as ranks of the canonical rendered term,
+        exactly like :meth:`from_kg`, so two stores of the same graph use
+        identical ids regardless of how they were built."""
+        from repro.data.terms import canonical_term, unescape_literal
+
+        canon = sorted(
+            {
+                tuple(canonical_term(t) for t in trip)
+                for trip in triples
+            }
+        )
+        terms = sorted({t for trip in canon for t in trip})
+        dictionary = Dictionary()
+        term_pat = np.zeros(len(terms), np.int32)
+        term_val = np.zeros(len(terms), np.int32)
+        for i, term in enumerate(terms):
+            if term.startswith("<"):
+                kind, body = "iri", term[1:-1]
+            else:
+                kind, body = "lit", unescape_literal(term[1:-1])
+            if "{}" in body:
+                # a literal '{}' would read as a template slot: route the
+                # body through the value side of the (pattern, value) pair
+                if "\x1f" in body:
+                    raise ValueError(
+                        f"term body mixes '{{}}' and the multi-column "
+                        f"separator; not representable: {term!r}"
+                    )
+                term_pat[i] = dictionary.encode_scalar(f"{kind}:{{}}")
+                term_val[i] = dictionary.encode_scalar(body)
+            else:
+                # slotless pattern: render_term never reads the value id —
+                # point it at the pattern string to stay in range
+                term_pat[i] = dictionary.encode_scalar(f"{kind}:{body}")
+                term_val[i] = term_pat[i]
+        tid = {t: i for i, t in enumerate(terms)}
+        cols = np.asarray(
+            [[tid[s], tid[p], tid[o]] for s, p, o in canon], np.int32
+        ).reshape(-1, 3)
+        store = cls.build(
+            dictionary, term_pat, term_val, cols[:, 0], cols[:, 1], cols[:, 2]
+        )
+        store._term_ids = dict(tid)
+        return store
+
+    @classmethod
     def build(
         cls, dictionary, term_pat, term_val, s, p, o,
         perms: dict[str, np.ndarray] | None = None,
@@ -198,6 +249,65 @@ class TripleStore:
                 jnp.asarray(c) for c in self.indexes[order].cols
             )
         return self._dev[order]
+
+    # term ids must fit KEY_BITS for the packed range-search keys; beyond
+    # that the executor falls back to the 3-column lexicographic scan
+    KEY_BITS = 21
+
+    def device_keys(self, order: str):
+        """The index's (primary, secondary, tertiary) columns packed into
+        one *sorted* 63-bit key per row, split into two int32 device
+        columns ``(hi, lo)`` — jax runs without x64, so the key ships as a
+        pair; the low word carries the unsigned->signed bias (XOR of the
+        sign bit) to keep int32 comparisons order-preserving.  Fields are
+        shifted +1 so the ``-1`` wildcard packs below every real id.  A
+        lexicographic range scan becomes a 2-column binary search (one
+        round per bit of the row count, 2 gathers per round, vs 32x3 for
+        the general scan).  ``None`` when term ids overflow the fields."""
+        if self.n_terms >= (1 << self.KEY_BITS) - 2:
+            return None
+        cache_key = f"keys_{order}"
+        if cache_key not in self._dev:
+            c0, c1, c2 = self.indexes[order].cols
+            b = self.KEY_BITS
+            packed = (
+                ((c0.astype(np.int64) + 1) << (2 * b))
+                | ((c1.astype(np.int64) + 1) << b)
+                | (c2.astype(np.int64) + 1)
+            )
+            khi = (packed >> 32).astype(np.int32)
+            klo = (
+                (packed & 0xFFFFFFFF).astype(np.uint32)
+                ^ np.uint32(0x80000000)
+            ).view(np.int32)
+            self._dev[cache_key] = (jnp.asarray(khi), jnp.asarray(klo))
+        return self._dev[cache_key]
+
+    def device_primary_starts(self, order: str):
+        """``starts[t] .. starts[t+1]`` is the row range whose *primary*
+        column equals term ``t`` — seeds a range search so it bisects only
+        that term's rows (e.g. one subject's few triples) instead of the
+        whole index."""
+        cache_key = f"prim_{order}"
+        if cache_key not in self._dev:
+            c0 = self.indexes[order].cols[0]
+            starts = np.searchsorted(
+                c0, np.arange(self.n_terms + 1)
+            ).astype(np.int32)
+            self._dev[cache_key] = jnp.asarray(starts)
+        return self._dev[cache_key]
+
+    def primary_rounds(self, order: str) -> int:
+        """Bisection rounds that cover the widest primary-term row range of
+        this index (static per store: it sizes the jitted search loop)."""
+        cache_key = f"prim_rounds_{order}"
+        cached = self._dev.get(cache_key)
+        if cached is None:
+            starts = np.asarray(self.device_primary_starts(order))
+            widest = int(np.max(np.diff(starts))) if self.n_terms else 1
+            cached = max(1, widest.bit_length())
+            self._dev[cache_key] = cached
+        return cached
 
     # -- term decode / encode ------------------------------------------------
 

@@ -3,15 +3,18 @@
     PYTHONPATH=src python -m repro.launch.query \
         --kg out.kgz '?s <http://repro.org/vocab/gene_name> ?o' [--limit 20]
 
-    # conjunctive BGP: patterns separated by ' . ' inside one argument,
-    # or passed as multiple arguments
+    # full SPARQL-lite (OPTIONAL / FILTER / DISTINCT / LIMIT)
     PYTHONPATH=src python -m repro.launch.query --kg out.kgz \
-        '?m <http://repro.org/vocab/has_exon> ?e . ?e <p> ?v'
+        'SELECT ?m ?e WHERE { ?m <http://repro.org/vocab/has_exon> ?e
+                              FILTER(?e > 100) } LIMIT 10'
 
     # serving throughput (batched single-pattern path)
     PYTHONPATH=src python -m repro.launch.query --kg out.kgz --bench
 
-Build the snapshot with ``python -m repro.launch.rdfize ... --emit kgz``.
+Build the snapshot with ``python -m repro.launch.rdfize ... --emit kgz``;
+start the long-lived batching server with ``python -m repro.launch.serve``.
+The store is opened through the ``open_store`` cache, so a query phase and
+a ``--bench`` phase in one process load and validate the snapshot once.
 """
 
 from __future__ import annotations
@@ -24,8 +27,11 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--kg", required=True, help=".kgz snapshot path")
-    ap.add_argument("pattern", nargs="*", help="triple pattern(s): ?var <iri> \"literal\"")
+    ap.add_argument("query", nargs="*",
+                    help="SPARQL-lite query, or bare triple pattern(s)")
     ap.add_argument("--limit", type=int, default=None, help="max rows printed")
+    ap.add_argument("--explain", action="store_true",
+                    help="print the planned operator tree instead of rows")
     ap.add_argument("--bench", action="store_true",
                     help="measure batched single-pattern queries/s")
     ap.add_argument("--bench-queries", type=int, default=50_000)
@@ -34,14 +40,32 @@ def main() -> None:
                     help="also write the bench report to this path")
     args = ap.parse_args()
 
-    from repro.kg import decode_bindings, parse_bgp, persist, solve
+    from repro.kg import persist
+    from repro.serve import get_executor, parse_select
 
-    store = persist.load(args.kg)
+    store = persist.open_store(args.kg)
     print(
         f"[query] {store.n_triples} triples, {store.n_terms} terms "
         f"from {args.kg}",
         file=sys.stderr,
     )
+
+    if args.query:
+        q = parse_select(" . ".join(args.query))
+        executor = get_executor(store)
+        plan = executor.plan(q)
+        if args.explain:
+            print(plan.explain())
+        else:
+            result = executor.execute(plan, [q])
+            rows = result.rows(0, limit=args.limit)
+            print("\t".join(result.vars))
+            for row in rows:
+                print("\t".join("∅" if t is None else t for t in row))
+            shown = (
+                f" (showing {len(rows)})" if len(rows) < result.n(0) else ""
+            )
+            print(f"[query] {result.n(0)} solutions{shown}", file=sys.stderr)
 
     if args.bench:
         if store.n_triples == 0:
@@ -58,19 +82,9 @@ def main() -> None:
         if args.json:
             with open(args.json, "w", encoding="utf-8") as f:
                 json.dump(report, f, indent=2)
-        return
 
-    if not args.pattern:
-        ap.error("provide at least one triple pattern (or --bench)")
-    patterns = parse_bgp(" . ".join(args.pattern))
-    bindings = solve(store, patterns)
-    rows = decode_bindings(store, bindings, limit=args.limit)
-    variables = list(bindings.cols)
-    print("\t".join(variables))
-    for row in rows:
-        print("\t".join(row[v] for v in variables))
-    shown = f" (showing {len(rows)})" if len(rows) < bindings.n else ""
-    print(f"[query] {bindings.n} solutions{shown}", file=sys.stderr)
+    if not args.query and not args.bench:
+        ap.error("provide a query (or --bench)")
 
 
 if __name__ == "__main__":

@@ -1,78 +1,73 @@
-"""Serving driver: batched decode with a KV cache (smoke-scale).
+"""KG query server driver — serve a ``.kgz`` snapshot to concurrent clients.
 
-Demonstrates the full decode path on local devices: prefill the cache from
-prompts, then step the batched decode loop; reports tokens/s.
+    # server: load once, micro-batch concurrent clients per dispatch
+    PYTHONPATH=src python -m repro.launch.serve --kg out.kgz --port 7077
 
-    PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
-        --batch 4 --prompt-len 32 --gen 64
+    # client one-shot (retries the connect while the server warms up)
+    PYTHONPATH=src python -m repro.launch.serve --connect 127.0.0.1:7077 \
+        --query '?s <http://repro.org/vocab/gene_name> ?o' [--limit 5]
+
+The protocol is newline-delimited JSON (see ``repro.serve.server``); any
+language can speak it with a plain TCP socket.  The LM-serving demo that
+used to live here is ``examples/serve_lm.py``.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
+import json
+import sys
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="mixtral-8x7b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=64)
+    ap.add_argument("--kg", default=None, help=".kgz snapshot to serve")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=7077,
+                    help="0 picks a free port (printed on stderr)")
+    ap.add_argument("--max-batch", type=int, default=4096)
+    ap.add_argument("--linger-ms", type=float, default=2.0,
+                    help="how long the dispatcher waits for concurrent "
+                         "clients to coalesce into one batch")
+    ap.add_argument("--max-rows", type=int, default=1000,
+                    help="decoded rows per answer when the request sets no "
+                         "limit (n_total always reports the full count)")
+    ap.add_argument("--connect", default=None, metavar="HOST:PORT",
+                    help="client mode: send --query to a running server")
+    ap.add_argument("--query", default=None, help="query text (client mode)")
+    ap.add_argument("--limit", type=int, default=None,
+                    help="max rows decoded per answer (client mode)")
+    ap.add_argument("--retry-s", type=float, default=10.0,
+                    help="client mode: keep retrying the connect this long")
     args = ap.parse_args()
 
-    import jax
-    import jax.numpy as jnp
-    import numpy as np
+    if args.connect:
+        if not args.query:
+            ap.error("--connect needs --query")
+        from repro.serve.client import connect
 
-    from repro.configs import registry
-    from repro.models import transformer
+        host, _, port = args.connect.rpartition(":")
+        with connect(host or "127.0.0.1", int(port), retry_s=args.retry_s) as c:
+            resp = c.query(args.query, limit=args.limit)
+        print(json.dumps(resp, indent=2))
+        return
 
-    entry = registry.get_arch(args.arch)
-    if entry.family != "lm":
-        raise SystemExit(f"{args.arch} is not an LM")
-    cfg = entry.smoke_config()
-    print(f"[serve] {cfg.name} smoke ({cfg.param_count()/1e6:.2f}M params), "
-          f"window={cfg.window}")
+    if not args.kg:
+        ap.error("provide --kg to serve, or --connect/--query for client mode")
+    from repro.kg.persist import open_store
+    from repro.serve.server import KGServer
 
-    key = jax.random.PRNGKey(0)
-    params = transformer.init(key, cfg)
-    max_len = args.prompt_len + args.gen
-    cache = transformer.make_cache(cfg, args.batch, max_len)
-
-    decode = jax.jit(
-        lambda p, c, t, pos: transformer.decode_step(cfg, p, c, t, pos),
-        donate_argnums=(1,),
-    )
-
-    rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab, size=(args.batch, args.prompt_len))
-
-    # prefill by stepping the decode cache (smoke scale; production prefill
-    # lowers the chunked forward — see the prefill_32k dry-run cells)
-    t0 = time.perf_counter()
-    logits = None
-    for i in range(args.prompt_len):
-        logits, cache = decode(
-            params, cache, jnp.asarray(prompts[:, i: i + 1]), jnp.int32(i)
-        )
-    t_prefill = time.perf_counter() - t0
-
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-    out_tokens = [np.asarray(tok)]
-    t0 = time.perf_counter()
-    for i in range(args.gen - 1):
-        logits, cache = decode(
-            params, cache, tok, jnp.int32(args.prompt_len + i)
-        )
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        out_tokens.append(np.asarray(tok))
-    dt = time.perf_counter() - t0
-    total = args.batch * (args.gen - 1)
-    print(f"[serve] prefill {args.prompt_len} steps in {t_prefill:.2f}s; "
-          f"decode {total} tokens in {dt:.2f}s = {total/dt:.1f} tok/s")
-    gen = np.concatenate(out_tokens, axis=1)
-    print(f"[serve] sample generation (ids): {gen[0][:16].tolist()} ...")
+    store = open_store(args.kg)
+    print(f"[serve] {store.n_triples} triples, {store.n_terms} terms "
+          f"from {args.kg}", file=sys.stderr)
+    KGServer(
+        store,
+        host=args.host,
+        port=args.port,
+        max_batch=args.max_batch,
+        linger_ms=args.linger_ms,
+        max_rows=args.max_rows,
+    ).serve_forever()
 
 
 if __name__ == "__main__":

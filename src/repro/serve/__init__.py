@@ -1,0 +1,38 @@
+"""``repro.serve`` — SPARQL-lite query algebra + batching query server.
+
+The serving half of the KG lifecycle, layered over ``repro.kg`` stores:
+
+* :mod:`repro.serve.algebra` — the query IR (``SelectQuery``: BGP +
+  OPTIONAL + FILTER + projection/DISTINCT/LIMIT) and its parser.
+* :mod:`repro.serve.plan`    — cost-based planner: index-measured scan
+  cardinalities, greedy connected join ordering, filter pushdown.
+* :mod:`repro.serve.exec`    — the jitted executor: a whole plan (and a
+  whole batch of same-shape queries) runs as one fused device dispatch;
+  bindings never materialize on host between joins.
+* :mod:`repro.serve.values`  — literal value side tables (numeric/string
+  ranks) decoded once per store for FILTER evaluation on term ids.
+* :mod:`repro.serve.server`  — long-lived socket server micro-batching
+  concurrent clients by plan signature; :mod:`repro.serve.client` talks to
+  it (newline-delimited JSON).
+* :mod:`repro.serve.oracle`  — the naive full-algebra oracle anchoring the
+  tests.
+
+Entry point: ``python -m repro.launch.serve --kg out.kgz``.
+"""
+
+from repro.serve.algebra import SelectQuery, parse_select
+from repro.serve.exec import BatchResult, Executor, get_executor, solve_select
+from repro.serve.oracle import oracle_select
+from repro.serve.plan import Plan, plan_query
+
+__all__ = [
+    "BatchResult",
+    "Executor",
+    "Plan",
+    "SelectQuery",
+    "get_executor",
+    "oracle_select",
+    "parse_select",
+    "plan_query",
+    "solve_select",
+]

@@ -1,0 +1,441 @@
+"""SPARQL-lite query algebra — the IR between the wire and the planner.
+
+A query is a :class:`SelectQuery`: a required basic graph pattern, zero or
+more ``OPTIONAL`` groups (each itself a BGP), zero or more ``FILTER``
+expressions, a projection (``SELECT ?a ?b`` / ``SELECT *``), and optional
+``DISTINCT`` / ``LIMIT n`` modifiers.  The planner (``repro.serve.plan``)
+turns it into an operator tree — ``Scan`` / ``Join`` / ``LeftJoin`` /
+``Filter`` / ``Project`` / ``Distinct`` / ``Limit`` — and the executor
+(``repro.serve.exec``) lowers that tree to one fused jitted dispatch.
+
+Filter expressions cover the serving-relevant SPARQL core: comparisons
+(``<  <=  >  >=  =  !=``) between variables and constants, ``bound(?x)``,
+``!``, ``&&`` and ``||``.  Semantics over our untyped plain literals:
+
+* an *unquoted number* operand compares numerically — a term participates
+  iff its literal body parses as a float (else the comparison errors out to
+  false, as SPARQL type errors do);
+* a *quoted literal* operand compares by raw literal body (codepoint
+  order) for the ordering operators, and by term identity for ``=``/``!=``;
+* an ``<iri>`` operand compares by term identity (``=``/``!=`` only);
+* variable-vs-variable ordering compares numerically when both terms are
+  numeric, by literal body when both are literals, else false;
+* any comparison over an unbound variable (a ``LeftJoin`` miss) is false —
+  only ``bound()`` / ``!bound()`` observe unboundness.
+
+Everything here is host-side structure; no jax.  The structural
+*signature* of a query (constants abstracted away) is what the server
+batches on — see :func:`SelectQuery.signature`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Union
+
+from repro.data.terms import canonical_term, unescape_literal
+from repro.kg.query import TriplePattern, parse_bgp
+
+# ---------------------------------------------------------------------------
+# filter expression IR
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Var:
+    name: str  # includes the '?'
+
+
+@dataclasses.dataclass(frozen=True)
+class NumConst:
+    value: float
+
+
+@dataclasses.dataclass(frozen=True)
+class TermConst:
+    term: str  # canonical rendered N-Triples term: <iri> or "literal"
+
+    @property
+    def is_literal(self) -> bool:
+        return self.term.startswith('"')
+
+    @property
+    def body(self) -> str:
+        """Raw (unescaped) literal body; only valid for literals."""
+        return unescape_literal(self.term[1:-1])
+
+
+Operand = Union[Var, NumConst, TermConst]
+
+CMP_OPS = ("<=", ">=", "!=", "<", ">", "=")  # longest-match order
+
+
+@dataclasses.dataclass(frozen=True)
+class Cmp:
+    op: str
+    lhs: Operand
+    rhs: Operand
+
+
+@dataclasses.dataclass(frozen=True)
+class Bound:
+    var: Var
+
+
+@dataclasses.dataclass(frozen=True)
+class Not:
+    expr: "Expr"
+
+
+@dataclasses.dataclass(frozen=True)
+class And:
+    lhs: "Expr"
+    rhs: "Expr"
+
+
+@dataclasses.dataclass(frozen=True)
+class Or:
+    lhs: "Expr"
+    rhs: "Expr"
+
+
+Expr = Union[Cmp, Bound, Not, And, Or]
+
+
+def expr_variables(e: Expr) -> tuple[str, ...]:
+    """Variables an expression mentions, in first-appearance order."""
+    out: dict[str, None] = {}
+
+    def walk(x) -> None:
+        if isinstance(x, Cmp):
+            for side in (x.lhs, x.rhs):
+                if isinstance(side, Var):
+                    out.setdefault(side.name)
+        elif isinstance(x, Bound):
+            out.setdefault(x.var.name)
+        elif isinstance(x, Not):
+            walk(x.expr)
+        elif isinstance(x, (And, Or)):
+            walk(x.lhs)
+            walk(x.rhs)
+
+    walk(e)
+    return tuple(out)
+
+
+def _expr_signature(e: Expr):
+    """Structure with constant *values* abstracted (kinds kept — a numeric
+    and a string comparison lower differently)."""
+    if isinstance(e, Cmp):
+        def opsig(x):
+            if isinstance(x, Var):
+                return ("var", x.name)
+            if isinstance(x, NumConst):
+                return ("num",)
+            return ("lit",) if x.is_literal else ("iri",)
+
+        return ("cmp", e.op, opsig(e.lhs), opsig(e.rhs))
+    if isinstance(e, Bound):
+        return ("bound", e.var.name)
+    if isinstance(e, Not):
+        return ("not", _expr_signature(e.expr))
+    return (
+        "and" if isinstance(e, And) else "or",
+        _expr_signature(e.lhs),
+        _expr_signature(e.rhs),
+    )
+
+
+# ---------------------------------------------------------------------------
+# the query
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SelectQuery:
+    patterns: tuple[TriplePattern, ...]                   # required BGP
+    optionals: tuple[tuple[TriplePattern, ...], ...] = ()
+    filters: tuple[Expr, ...] = ()
+    select: tuple[str, ...] | None = None                 # None = SELECT *
+    distinct: bool = False
+    limit: int | None = None
+
+    def scope(self) -> tuple[str, ...]:
+        """All in-scope variables, required BGP first, then optionals, in
+        first-appearance order."""
+        out: dict[str, None] = {}
+        for pat in self.patterns:
+            for v in pat.variables:
+                out.setdefault(v)
+        for group in self.optionals:
+            for pat in group:
+                for v in pat.variables:
+                    out.setdefault(v)
+        return tuple(out)
+
+    def out_vars(self) -> tuple[str, ...]:
+        """The projected variable list (``SELECT *`` = full scope)."""
+        return self.scope() if self.select is None else self.select
+
+    def all_patterns(self) -> tuple[TriplePattern, ...]:
+        """Required + optional patterns flattened, in source order — the
+        index space ``plan.Scan.pattern_pos`` refers to."""
+        flat = list(self.patterns)
+        for group in self.optionals:
+            flat.extend(group)
+        return tuple(flat)
+
+    def signature(self):
+        """Hashable structural identity with constants abstracted: queries
+        with equal signatures share a plan, a compiled pipeline, and a
+        server micro-batch — only their constant ids differ."""
+
+        def patsig(p: TriplePattern):
+            return tuple(t if t.startswith("?") else "<const>" for t in p.slots)
+
+        return (
+            tuple(patsig(p) for p in self.patterns),
+            tuple(tuple(patsig(p) for p in g) for g in self.optionals),
+            tuple(_expr_signature(f) for f in self.filters),
+            self.select,
+            self.distinct,
+            # only limit *presence* is structural: the value rides along as
+            # a per-query runtime operand, so LIMIT 5 and LIMIT 50 share a
+            # plan, a compiled pipeline, and a server micro-batch
+            self.limit is not None,
+        )
+
+
+# ---------------------------------------------------------------------------
+# parser
+# ---------------------------------------------------------------------------
+
+_TOKEN = re.compile(
+    r"""\s*(?:
+        (?P<var>\?[A-Za-z_]\w*)
+      | (?P<iri><[^>]*>)
+      | (?P<lit>"(?:[^"\\]|\\.)*")
+      | (?P<num>[+-]?(?:\d+\.\d*|\.\d+|\d+)(?:[eE][+-]?\d+)?)
+      | (?P<word>[A-Za-z]\w*)
+      | (?P<op><=|>=|!=|&&|\|\||[<>=!(){}.*])
+    )""",
+    re.VERBOSE,
+)
+
+_KEYWORDS = {"select", "distinct", "where", "optional", "filter", "limit", "bound"}
+
+
+class _Tokens:
+    def __init__(self, text: str):
+        self.text = text
+        self.toks: list[tuple[str, str]] = []
+        pos = 0
+        while pos < len(text):
+            m = _TOKEN.match(text, pos)
+            if not m:
+                if text[pos:].strip():
+                    raise ValueError(f"cannot tokenize query at: {text[pos:pos+40]!r}")
+                break
+            pos = m.end()
+            self.toks.append((m.lastgroup, m.group().strip()))
+        self.i = 0
+
+    def peek(self) -> tuple[str, str] | None:
+        return self.toks[self.i] if self.i < len(self.toks) else None
+
+    def next(self) -> tuple[str, str]:
+        t = self.peek()
+        if t is None:
+            raise ValueError("unexpected end of query")
+        self.i += 1
+        return t
+
+    def take_word(self, word: str) -> bool:
+        t = self.peek()
+        if t and t[0] == "word" and t[1].lower() == word:
+            self.i += 1
+            return True
+        return False
+
+    def expect(self, kind: str, value: str | None = None) -> str:
+        k, v = self.next()
+        if k != kind or (value is not None and v != value):
+            raise ValueError(f"expected {value or kind}, got {v!r}")
+        return v
+
+
+def _parse_operand(tk: _Tokens) -> Operand:
+    kind, v = tk.next()
+    if kind == "var":
+        return Var(v)
+    if kind == "num":
+        return NumConst(float(v))
+    if kind == "iri":
+        return TermConst(canonical_term(v))
+    if kind == "lit":
+        return TermConst(canonical_term(v))
+    raise ValueError(f"expected a variable or constant in FILTER, got {v!r}")
+
+
+def _parse_unary(tk: _Tokens) -> Expr:
+    t = tk.peek()
+    if t and t[1] == "!":
+        tk.next()
+        return Not(_parse_unary(tk))
+    if t and t[1] == "(":
+        tk.next()
+        e = _parse_expr(tk)
+        tk.expect("op", ")")
+        return e
+    if t and t[0] == "word" and t[1].lower() == "bound":
+        tk.next()
+        tk.expect("op", "(")
+        kind, v = tk.next()
+        if kind != "var":
+            raise ValueError(f"bound() takes a variable, got {v!r}")
+        tk.expect("op", ")")
+        return Bound(Var(v))
+    lhs = _parse_operand(tk)
+    t = tk.peek()
+    if not t or t[1] not in CMP_OPS:
+        raise ValueError(f"expected a comparison operator after {lhs}")
+    op = tk.next()[1]
+    rhs = _parse_operand(tk)
+    if not (isinstance(lhs, Var) or isinstance(rhs, Var)):
+        raise ValueError("FILTER comparison needs at least one variable")
+    if op in ("<", "<=", ">", ">="):
+        for side in (lhs, rhs):
+            if isinstance(side, TermConst) and not side.is_literal:
+                raise ValueError("IRIs only support = / != comparisons")
+    return Cmp(op, lhs, rhs)
+
+
+def _parse_and(tk: _Tokens) -> Expr:
+    e = _parse_unary(tk)
+    while (t := tk.peek()) and t[1] == "&&":
+        tk.next()
+        e = And(e, _parse_unary(tk))
+    return e
+
+
+def _parse_expr(tk: _Tokens) -> Expr:
+    e = _parse_and(tk)
+    while (t := tk.peek()) and t[1] == "||":
+        tk.next()
+        e = Or(e, _parse_and(tk))
+    return e
+
+
+def _parse_triple(tk: _Tokens) -> TriplePattern:
+    slots = []
+    for _ in range(3):
+        kind, v = tk.next()
+        if kind == "var":
+            slots.append(v)
+        elif kind in ("iri", "lit"):
+            slots.append(canonical_term(v))
+        else:
+            raise ValueError(f"expected a term in a triple pattern, got {v!r}")
+    t = tk.peek()
+    if t and t[1] == ".":
+        tk.next()
+    return TriplePattern(*slots)
+
+
+def _parse_group(tk: _Tokens):
+    patterns: list[TriplePattern] = []
+    optionals: list[tuple[TriplePattern, ...]] = []
+    filters: list[Expr] = []
+    while (t := tk.peek()) and t[1] != "}":
+        if t[0] == "word" and t[1].lower() == "optional":
+            tk.next()
+            tk.expect("op", "{")
+            group: list[TriplePattern] = []
+            while (u := tk.peek()) and u[1] != "}":
+                group.append(_parse_triple(tk))
+            tk.expect("op", "}")
+            if not group:
+                raise ValueError("empty OPTIONAL group")
+            optionals.append(tuple(group))
+        elif t[0] == "word" and t[1].lower() == "filter":
+            tk.next()
+            tk.expect("op", "(")
+            filters.append(_parse_expr(tk))
+            tk.expect("op", ")")
+        else:
+            patterns.append(_parse_triple(tk))
+    return tuple(patterns), tuple(optionals), tuple(filters)
+
+
+def parse_select(text: str) -> SelectQuery:
+    """Parse a SPARQL-lite query.  Two accepted forms:
+
+    * ``SELECT [DISTINCT] ?a ?b|* WHERE { ... } [LIMIT n]`` where the group
+      holds triple patterns, ``OPTIONAL { ... }`` blocks and ``FILTER (...)``
+      expressions;
+    * a bare BGP (``'?s <p> ?o . ?o <q> "v"'``) — shorthand for
+      ``SELECT * WHERE { ... }``.
+    """
+    stripped = text.lstrip()
+    if not re.match(r"(?i)select\b", stripped):
+        return SelectQuery(patterns=tuple(parse_bgp(text)))
+    tk = _Tokens(text)
+    tk.take_word("select")
+    distinct = tk.take_word("distinct")
+    select: tuple[str, ...] | None
+    if (t := tk.peek()) and t[1] == "*":
+        tk.next()
+        select = None
+    else:
+        names: list[str] = []
+        while (t := tk.peek()) and t[0] == "var":
+            names.append(tk.next()[1])
+        if not names:
+            raise ValueError("SELECT needs a variable list or *")
+        select = tuple(dict.fromkeys(names))
+    if not tk.take_word("where"):
+        raise ValueError("expected WHERE")
+    tk.expect("op", "{")
+    patterns, optionals, filters = _parse_group(tk)
+    tk.expect("op", "}")
+    limit = None
+    if tk.take_word("limit"):
+        kind, v = tk.next()
+        if kind != "num" or not re.fullmatch(r"\d+", v):
+            raise ValueError(f"LIMIT takes a non-negative integer, got {v!r}")
+        limit = int(v)
+    if tk.peek() is not None:
+        raise ValueError(f"trailing tokens after query: {tk.peek()[1]!r}")
+    if not patterns:
+        raise ValueError("the required group needs at least one triple pattern")
+    q = SelectQuery(
+        patterns=patterns,
+        optionals=optionals,
+        filters=filters,
+        select=select,
+        distinct=distinct,
+        limit=limit,
+    )
+    _validate(q)
+    return q
+
+
+def _validate(q: SelectQuery) -> None:
+    """Reject optional groups that share variables bound only in *other*
+    optional groups: joining on a maybe-unbound column needs SPARQL's full
+    compatibility semantics, which the fused pipeline deliberately does not
+    implement (plan-time error beats silently wrong answers)."""
+    required = set()
+    for pat in q.patterns:
+        required.update(pat.variables)
+    seen_optional: set[str] = set()
+    for group in q.optionals:
+        gvars = {v for pat in group for v in pat.variables}
+        clash = (gvars & seen_optional) - required
+        if clash:
+            raise ValueError(
+                "OPTIONAL groups may not share variables that are unbound in "
+                f"the required pattern: {sorted(clash)}"
+            )
+        seen_optional |= gvars - required

@@ -1,0 +1,140 @@
+"""Serving throughput for the fused query pipeline (``BENCH_serve.json``).
+
+Three query classes over the paper's testbed store, each at batch sizes
+1 / 64 / 4096 through the pre-encoded executor hot path (the same unit of
+work ``repro.kg.bench`` measures for single patterns, so the numbers are
+directly comparable to ``BENCH_kg.json``):
+
+* ``single``     — ``?s <p> <o>`` point lookups;
+* ``bgp3``       — a 3-pattern star BGP anchored at a selective constant
+  (two sorted-merge joins fused into the dispatch);
+* ``opt_filter`` — 2 required patterns + ``OPTIONAL`` + ``FILTER`` (join,
+  left-join backfill and side-table filtering in one dispatch).
+
+Every query is derived from an existing triple, so every query has at
+least one answer.  Constants vary per query; the plan (and the compiled
+pipeline) is shared per class — exactly the server's steady state.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.kg.store import TripleStore
+from repro.serve import algebra as A
+from repro.serve import plan as P
+from repro.serve.exec import Executor, get_executor
+
+BATCH_SIZES = (1, 64, 4096)
+
+
+def _workload_preds(store: TripleStore) -> list[int]:
+    """Predicate term ids sorted by frequency (most common last)."""
+    ids, counts = np.unique(store.p, return_counts=True)
+    return [int(t) for t in ids[np.argsort(counts)]]
+
+
+def _anchor_pool(store: TripleStore, p0: int, seed: int) -> np.ndarray:
+    """Object ids of ``p0`` triples — each anchors a non-empty query."""
+    rows = np.nonzero(store.p == p0)[0]
+    rng = np.random.default_rng(seed)
+    return store.o[rows[rng.integers(0, len(rows), 1 << 16)]]
+
+
+def _classes(store: TripleStore):
+    """(name, representative query text, anchor scan pattern_pos)."""
+    preds = _workload_preds(store)
+    if len(preds) < 3:
+        raise ValueError("serve bench needs >= 3 predicates in the store")
+    p0, p1, p2 = preds[0], preds[1], preds[2]
+    t0, t1, t2 = (store.decode_term(p) for p in (p0, p1, p2))
+    some_o = store.decode_term(int(_anchor_pool(store, p0, 0)[0]))
+    return p0, [
+        ("single", f"?s {t0} {some_o}"),
+        ("bgp3", f"?m {t0} {some_o} . ?m {t1} ?b . ?m {t2} ?c"),
+        (
+            "opt_filter",
+            f"SELECT * WHERE {{ ?m {t0} {some_o} . ?m {t1} ?b "
+            f'OPTIONAL {{ ?m {t2} ?c }} FILTER(?b != "@none@") }}',
+        ),
+    ]
+
+
+def _encoded_batches(
+    executor: Executor,
+    qtext: str,
+    p0: int,
+    batch: int,
+    n_batches: int,
+    seed: int,
+):
+    """Pre-encode ``n_batches`` constants batches: the representative
+    query's encoding tiled, with the anchor object id varied per query."""
+    store = executor.store
+    q = A.parse_select(qtext)
+    plan = executor.plan(q)
+    rep = P.encode_scan_consts(store, plan, q)
+    # the anchor scan is the one reading pattern 0 (the only pattern whose
+    # object slot holds a constant anchored at p0)
+    anchor_scan = next(
+        i for i, s in enumerate(plan.scans) if s.pattern_pos == 0
+    )
+    fops = None
+    if plan.n_filter_ops:
+        from repro.serve.values import value_table
+
+        f1 = P.encode_filter_ops(store, value_table(store), q.filters)
+        fops = np.tile(f1, (batch, 1))
+    pool = _anchor_pool(store, p0, seed)
+    batches = []
+    for b in range(n_batches):
+        consts = np.tile(rep, (batch, 1, 1))
+        consts[:, anchor_scan, 2] = pool[b * batch : (b + 1) * batch]
+        batches.append(consts)
+    return plan, batches, fops
+
+
+def bench_serve(
+    store: TripleStore,
+    batch_sizes: tuple[int, ...] = BATCH_SIZES,
+    target_queries: int = 50_000,
+    seed: int = 0,
+) -> dict:
+    """Time every query class at every batch size; returns a json-ready
+    report keyed ``{class: {batch: {queries_per_s, ...}}}``."""
+    executor = get_executor(store)
+    p0, classes = _classes(store)
+    report: dict = {
+        "n_triples": int(store.n_triples),
+        "n_terms": int(store.n_terms),
+        "classes": {},
+    }
+    for name, qtext in classes:
+        per_batch = {}
+        for batch in batch_sizes:
+            n_batches = max(1, min(target_queries // batch, 64))
+            plan, batches, fops = _encoded_batches(
+                executor, qtext, p0, batch, n_batches, seed
+            )
+            # warm-up: compile + let the capacity feedback converge
+            total = 0
+            for consts in batches[: max(2, n_batches // 8)]:
+                total += int(
+                    executor.execute_encoded(plan, consts, fops).counts.sum()
+                )
+            t0 = time.perf_counter()
+            for consts in batches:
+                executor.execute_encoded(plan, consts, fops)
+            dt = time.perf_counter() - t0
+            n_queries = n_batches * batch
+            per_batch[str(batch)] = {
+                "n_queries": n_queries,
+                "n_batches": n_batches,
+                "wall_s": dt,
+                "queries_per_s": n_queries / dt,
+                "warm_matches": total,
+            }
+        report["classes"][name] = {"query": qtext, "batches": per_batch}
+    return report

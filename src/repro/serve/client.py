@@ -1,0 +1,72 @@
+"""Minimal client for the :mod:`repro.serve.server` wire protocol."""
+
+from __future__ import annotations
+
+import json
+import socket
+import time
+
+
+class Client:
+    """One connection; requests are correlated by an auto-incremented id
+    (the server answers every request with exactly one line)."""
+
+    def __init__(self, host: str, port: int, timeout: float = 30.0):
+        self._sock = socket.create_connection((host, port), timeout=timeout)
+        self._rfile = self._sock.makefile("r", encoding="utf-8")
+        self._next_id = 0
+
+    def close(self) -> None:
+        try:
+            self._rfile.close()
+            self._sock.close()
+        except OSError:
+            pass
+
+    def __enter__(self) -> "Client":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _roundtrip(self, req: dict) -> dict:
+        self._next_id += 1
+        req = {"id": self._next_id, **req}
+        self._sock.sendall((json.dumps(req) + "\n").encode("utf-8"))
+        line = self._rfile.readline()
+        if not line:
+            raise ConnectionError("server closed the connection")
+        resp = json.loads(line)
+        if resp.get("error"):
+            raise RuntimeError(f"server error: {resp['error']}")
+        return resp
+
+    def query(self, text: str, limit: int | None = None) -> dict:
+        req: dict = {"query": text}
+        if limit is not None:
+            req["limit"] = limit
+        return self._roundtrip(req)
+
+    def explain(self, text: str) -> str:
+        return self._roundtrip({"op": "explain", "query": text})["plan"]
+
+    def ping(self) -> bool:
+        return bool(self._roundtrip({"op": "ping"}).get("ok"))
+
+    def stats(self) -> dict:
+        return self._roundtrip({"op": "stats"})
+
+
+def connect(
+    host: str, port: int, retry_s: float = 0.0, timeout: float = 30.0
+) -> Client:
+    """Connect, optionally retrying for ``retry_s`` seconds (the CI smoke
+    path: the server may still be loading its snapshot)."""
+    deadline = time.monotonic() + retry_s
+    while True:
+        try:
+            return Client(host, port, timeout=timeout)
+        except OSError:
+            if time.monotonic() >= deadline:
+                raise
+            time.sleep(0.1)

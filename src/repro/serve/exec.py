@@ -1,0 +1,960 @@
+"""Jitted plan executor — a whole query (batch) in one fused dispatch.
+
+The old BGP path materialized every binding table on host between joins;
+here the full operator tree — range scans, sorted-merge joins, OPTIONAL
+backfill, filters, distinct/sort/limit — lowers to *one* jitted function.
+Binding tables stay on device as power-of-two padded int32 columns with a
+packed-valid-prefix row count; ``-1`` is the unbound sentinel a ``LeftJoin``
+backfills for optional-only variables.
+
+Shapes must be static under jit, so every operator has a *capacity* (scan
+rows, join fan-out ``M``, join output rows).  Capacities start from the
+planner's estimates and are corrected by a feedback loop: the compiled
+pipeline returns, alongside the results, the *exact* size each point
+needed; if anything was truncated the executor re-runs once with capacities
+bumped to ``next_pow2(needed)`` (growth is monotone, so the loop
+terminates; capacities are remembered per query signature, so a serving
+workload converges to exactly one dispatch per batch).  Power-of-two
+padding everywhere bounds the number of distinct compiled shapes to
+O(log n) per signature.
+
+Batching: the single-query pipeline is ``vmap``-ed over the batch axis, so
+*many same-shape queries execute per dispatch* — constants (term ids, rank
+bounds) are the only per-query data.  This is the server's hot path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hashset import next_pow2
+from repro.kg.query import _lex_search
+from repro.kg.store import ORDERS, TripleStore
+from repro.serve import algebra as A
+from repro.serve import plan as P
+from repro.serve.values import value_table
+
+I32_MAX = np.int32(np.iinfo(np.int32).max)
+UNBOUND = np.int32(-1)
+_MAX_GROW_ROUNDS = 12
+
+
+# ---------------------------------------------------------------------------
+# results
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BatchResult:
+    """Padded, deterministically ordered solution tables for a whole batch."""
+
+    store: TripleStore
+    vars: tuple[str, ...]
+    cols: dict[str, np.ndarray]   # int32[B, C] each (C >= max count)
+    counts: np.ndarray            # int64[B]
+
+    def n(self, i: int) -> int:
+        return int(self.counts[i])
+
+    def ids(self, i: int) -> list[tuple[int, ...]]:
+        """Query ``i``'s rows as term-id tuples (-1 = unbound)."""
+        k = self.n(i)
+        return [
+            tuple(int(self.cols[v][i, r]) for v in self.vars) for r in range(k)
+        ]
+
+    def rows(self, i: int, limit: int | None = None) -> list[tuple]:
+        """Query ``i``'s rows decoded to rendered terms (None = unbound)."""
+        k = self.n(i)
+        if limit is not None:
+            k = min(k, limit)
+        return [
+            tuple(
+                None
+                if int(self.cols[v][i, r]) < 0
+                else self.store.decode_term(int(self.cols[v][i, r]))
+                for v in self.vars
+            )
+            for r in range(k)
+        ]
+
+
+# ---------------------------------------------------------------------------
+# traced operators (single query; vmapped over the batch by the compiler)
+# ---------------------------------------------------------------------------
+
+
+def _pack_bound(q0, q1, q2, bits: int):
+    """Pack a (possibly wildcarded) query bound into the store's split
+    63-bit key space (see ``TripleStore.device_keys``): fields are shifted
+    +1 so ``-1`` packs below every real id and ``I32_MAX`` clamps to the
+    all-ones field above every id.  Returns int32 ``(hi, lo)`` with the
+    low word sign-bit-biased, matching the store's key columns."""
+
+    def f(x):
+        # clip BEFORE the +1: I32_MAX + 1 would wrap in int32
+        return jnp.clip(
+            jnp.asarray(x), -1, (1 << bits) - 2
+        ).astype(jnp.uint32) + jnp.uint32(1)
+
+    f0, f1, f2 = f(q0), f(q1), f(q2)
+    hi = (f0 << (2 * bits - 32)) | (f1 >> (32 - bits))
+    lo = ((f1 & jnp.uint32((1 << (32 - bits)) - 1)) << bits) | f2
+    return (
+        hi.astype(jnp.int32),
+        jax.lax.bitcast_convert_type(lo ^ jnp.uint32(0x80000000), jnp.int32),
+    )
+
+
+def _lex_search2(khi, klo, qhi, qlo, upper: bool, rounds: int,
+                 lo_init=None, hi_init=None):
+    """Binary search on the split-key pair: count of rows lex-< (or <= for
+    ``upper``) the query bound.  ``rounds`` covers the widest possible
+    [lo_init, hi_init) window (the full store by default; a seeded search
+    passes a primary-term row range and correspondingly few rounds)."""
+    n = khi.shape[0]
+    if lo_init is None:
+        lo_i = jnp.zeros(jnp.shape(qhi), jnp.int32)
+        hi_i = jnp.full(jnp.shape(qhi), n, jnp.int32)
+    else:
+        lo_i = jnp.broadcast_to(lo_init, jnp.shape(qhi))
+        hi_i = jnp.broadcast_to(hi_init, jnp.shape(qhi))
+
+    def body(_, state):
+        lo_i, hi_i = state
+        mid = lo_i + ((hi_i - lo_i) >> 1)
+        g = jnp.clip(mid, 0, max(n - 1, 0))
+        mhi, mlo = khi[g], klo[g]
+        tail = (mlo <= qlo) if upper else (mlo < qlo)
+        before = (mhi < qhi) | ((mhi == qhi) & tail)
+        open_ = lo_i < hi_i
+        return (
+            jnp.where(open_ & before, mid + 1, lo_i),
+            jnp.where(open_ & ~before, mid, hi_i),
+        )
+
+    lo_i, _ = jax.lax.fori_loop(0, rounds, body, (lo_i, hi_i))
+    return lo_i
+
+
+def _range_search(
+    keys, c0, c1, c2, lo_q, hi_q, bits: int, rounds: int,
+    primary_q=None, prim_start=None, prim_rounds: int | None = None,
+):
+    """(start, end) of the rows inside [lo_q, hi_q] — a 2-column split-key
+    binary search when the store's ids fit the packed fields, else the
+    general 3-column lexicographic search.  With a bound primary term
+    (``primary_q``), the bisection is *seeded* to that term's row range
+    (``prim_start``) and runs only ``prim_rounds`` rounds — for a bound
+    subject that is the subject's degree, not the store size."""
+    if keys is not None:
+        khi, klo = keys
+        qhi_l, qlo_l = _pack_bound(*lo_q, bits)
+        qhi_h, qlo_h = _pack_bound(*hi_q, bits)
+        if primary_q is not None:
+            T = prim_start.shape[0] - 1
+            g0 = jnp.clip(primary_q, 0, max(T - 1, 0))
+            lo0 = prim_start[g0]
+            hi0 = prim_start[g0 + 1]
+            lo = _lex_search2(
+                khi, klo, qhi_l, qlo_l, False, prim_rounds, lo0, hi0
+            )
+            hi = _lex_search2(
+                khi, klo, qhi_h, qlo_h, True, prim_rounds, lo0, hi0
+            )
+            # a negative primary (unknown constant / padded row) is empty
+            ok = primary_q >= 0
+            zero = jnp.zeros_like(lo)
+            return jnp.where(ok, lo, zero), jnp.where(ok, hi, zero)
+        lo = _lex_search2(khi, klo, qhi_l, qlo_l, upper=False, rounds=rounds)
+        hi = _lex_search2(khi, klo, qhi_h, qlo_h, upper=True, rounds=rounds)
+        return lo, hi
+    lo = _lex_search(c0, c1, c2, lo_q[0], lo_q[1], lo_q[2], upper=False)
+    hi = _lex_search(c0, c1, c2, hi_q[0], hi_q[1], hi_q[2], upper=True)
+    return lo, hi
+
+
+def _compact(cols: dict, mask, cap: int):
+    """Scatter masked rows to a packed prefix of a ``cap``-row table.
+    Returns (cols, valid_count, total_wanted) — ``total_wanted`` feeds the
+    capacity feedback when it exceeds ``cap``."""
+    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    keep = mask & (pos < cap)
+    idx = jnp.where(keep, pos, cap)  # cap is out-of-range: dropped
+    out = {
+        v: jnp.full(cap, UNBOUND, jnp.int32).at[idx].set(c, mode="drop")
+        for v, c in cols.items()
+    }
+    total = jnp.sum(mask.astype(jnp.int32))
+    return out, jnp.minimum(total, cap), total
+
+
+def _sort_perm(cols: dict, order: tuple[str, ...], n, cap: int):
+    """Permutation sorting the valid prefix lexicographically by ``order``
+    columns (invalid rows, keyed all-I32_MAX, sort last; real ids are far
+    below it).  One variadic ``lax.sort`` pass over all key columns.  Term
+    ids are dense ranks of rendered terms, so this order is identical
+    across stores of the same graph."""
+    valid = jnp.arange(cap) < n
+    keys = [jnp.where(valid, cols[v], I32_MAX) for v in order]
+    payload = jnp.arange(cap, dtype=jnp.int32)
+    out = jax.lax.sort(
+        tuple(keys) + (payload,), num_keys=len(keys), is_stable=True
+    )
+    return out[-1], valid
+
+
+class _Lowerer:
+    """Builds the traced single-query pipeline for one (plan, caps)."""
+
+    def __init__(
+        self,
+        plan: P.Plan,
+        caps: dict[str, int],
+        store_n: int,
+        key_bits: int,
+        packed: bool,
+        prim_rounds: dict[int, int] | None = None,
+    ):
+        self.plan = plan
+        self.caps = caps
+        self.store_n = store_n
+        self.key_bits = key_bits
+        self.packed = packed
+        self.rounds = max(1, int(store_n).bit_length())
+        self.prim_rounds = prim_rounds or {}
+        self.scan_index = {s.node_id: i for i, s in enumerate(plan.scans)}
+        self.needed: dict[str, jnp.ndarray] = {}
+        # the column sequence each node's rows are known to be sorted by
+        # (empty when unknown) — lets the tail skip redundant sorts
+        self._sorted: dict[int, tuple[str, ...]] = {}
+        # bound during trace
+        self.scan_cols: dict[int, tuple] = {}
+        self.scan_keys: dict[int, jnp.ndarray | None] = {}
+        self.scan_prim: dict[int, jnp.ndarray | None] = {}
+        self.vt_arrays: tuple | None = None
+        self.consts = None
+        self.fops = None
+        self.qvalid = None
+        self.qlimit = None
+
+    def _search_args(self, node):
+        """Per-reader seeding operands (packed path only)."""
+        if not self.packed:
+            return {}
+        return {
+            "prim_start": self.scan_prim[node.node_id],
+            "prim_rounds": self.prim_rounds[node.node_id],
+        }
+
+    # -- scans ---------------------------------------------------------------
+
+    def _scan(self, node: P.Scan):
+        cap = self.caps.get(f"scan{node.node_id}", 1)
+        c0, c1, c2 = self.scan_cols[node.node_id]
+        q = self.consts[self.scan_index[node.node_id]]
+        perm3 = ORDERS[node.order]
+        lo_q, hi_q = [], []
+        for j in range(3):
+            pos = perm3[j]
+            if pos in node.const_slots:
+                lo_q.append(q[pos])
+                hi_q.append(q[pos])
+            else:
+                lo_q.append(jnp.int32(-1))
+                hi_q.append(I32_MAX)
+        primary_q = q[perm3[0]] if perm3[0] in node.const_slots else None
+        lo, hi = _range_search(
+            self.scan_keys[node.node_id], c0, c1, c2,
+            lo_q, hi_q, self.key_bits, self.rounds,
+            primary_q=primary_q if self.packed else None,
+            **self._search_args(node),
+        )
+        count = jnp.where(self.qvalid, hi - lo, 0)
+        if not node.out_vars:  # all-constant pattern: pure existence filter
+            return {}, jnp.minimum(count, 1)
+        self.needed[f"scan{node.node_id}"] = count
+        # rows come out in index order: sorted by the variable positions in
+        # the order's (primary, secondary, tertiary) sequence
+        var_by_pos = dict(node.var_slots)
+        self._sorted[node.node_id] = tuple(
+            var_by_pos[pos] for pos in perm3 if pos in var_by_pos
+        )
+        r = jnp.clip(lo + jnp.arange(cap, dtype=jnp.int32), 0, self.store_n - 1)
+        valid = jnp.arange(cap) < count
+        by_pos = {perm3[j]: (c0, c1, c2)[j] for j in range(3)}
+        cols = {v: by_pos[pos][r] for pos, v in node.var_slots}
+        if node.eq_pairs:
+            pat_vals = {pos: by_pos[pos][r] for pos in range(3)}
+            for pa, pb in node.eq_pairs:
+                valid = valid & (pat_vals[pa] == pat_vals[pb])
+            return _compact(cols, valid, cap)[:2]
+        cols = {v: jnp.where(valid, c, UNBOUND) for v, c in cols.items()}
+        return cols, jnp.minimum(count, cap)
+
+    # -- joins ---------------------------------------------------------------
+
+    def _bind_join(self, node: P.BindJoin):
+        """Index nested-loop join: each left row's bound variables extend
+        the bound prefix of the pattern's range scan — the pattern is
+        never materialized independently."""
+        lcols, ln = self._eval(node.left)
+        cl = len(next(iter(lcols.values())))
+        c0, c1, c2 = self.scan_cols[node.node_id]
+        q = self.consts[self.scan_index[node.node_id]]
+        perm3 = ORDERS[node.order]
+        bound_by_pos = {pos: lcols[v] for pos, v in node.bound_slots}
+        lvalid = jnp.arange(cl) < ln
+        lo_q, hi_q = [], []
+        for j in range(3):
+            pos = perm3[j]
+            if pos in node.const_slots:
+                lo_q.append(jnp.broadcast_to(q[pos], (cl,)))
+                hi_q.append(jnp.broadcast_to(q[pos], (cl,)))
+            elif pos in bound_by_pos:
+                # left-bound variable: an exact key for this row's lookup
+                lo_q.append(bound_by_pos[pos])
+                hi_q.append(bound_by_pos[pos])
+            else:
+                lo_q.append(jnp.full(cl, -1, jnp.int32))
+                hi_q.append(jnp.full(cl, I32_MAX, jnp.int32))
+        ppos = perm3[0]
+        if ppos in node.const_slots:
+            primary_q = jnp.broadcast_to(q[ppos], (cl,))
+        else:  # bind-join orders put a bound slot first by construction
+            primary_q = bound_by_pos[ppos]
+        lo, hi = _range_search(
+            self.scan_keys[node.node_id], c0, c1, c2,
+            lo_q, hi_q, self.key_bits, self.rounds,
+            primary_q=primary_q if self.packed else None,
+            **self._search_args(node),
+        )
+        cnt = jnp.where(lvalid, hi - lo, 0)
+
+        left_sorted = self._sorted.get(node.left.node_id, ())
+        # expansion preserves left row order and emits each row's matches
+        # in index order, so sortedness extends iff the left rows were
+        # totally ordered (sorted by every left column)
+        if set(left_sorted) >= set(node.left.out_vars):
+            free_by_pos = dict(node.free_slots)
+            self._sorted[node.node_id] = left_sorted + tuple(
+                free_by_pos[pos] for pos in perm3 if pos in free_by_pos
+            )
+        if node.kind == "left" and node.free_slots:
+            # backfill rows append after the matches: order lost
+            self._sorted[node.node_id] = ()
+
+        if not node.free_slots:  # pure (anti-)semijoin: no new bindings
+            self._sorted[node.node_id] = left_sorted
+            if node.kind == "left":
+                return lcols, ln
+            return _compact(lcols, lvalid & (cnt > 0), cl)[:2]
+
+        by_pos = {perm3[j]: (c0, c1, c2)[j] for j in range(3)}
+        cap = self.caps[f"bindC{node.node_id}"]
+        if node.eq_pairs:
+            return self._bind_join_grid(node, lcols, lvalid, lo, cnt, by_pos, cap)
+        # packed expansion: out row j belongs to the left row whose count
+        # prefix-sum passes j (a log-width searchsorted), so matches land
+        # directly packed — no (rows x fan-out) grid, no fan-out capacity,
+        # no compaction pass
+        cl = lvalid.shape[0]
+        cum = jnp.cumsum(cnt)
+        total = cum[cl - 1]
+        j = jnp.arange(cap, dtype=jnp.int32)
+        rowidx = jnp.searchsorted(cum, j, side="right").astype(jnp.int32)
+        rowc = jnp.clip(rowidx, 0, cl - 1)
+        prev = jnp.where(rowc > 0, cum[rowc - 1], 0)
+        r = jnp.clip(lo[rowc] + (j - prev), 0, self.store_n - 1)
+        valid_out = j < jnp.minimum(total, cap)
+        out_vals = {}
+        for v in node.out_vars:
+            if v in lcols:
+                vals = lcols[v][rowc]
+            else:
+                pos = next(p for p, fv in node.free_slots if fv == v)
+                vals = by_pos[pos][r]
+            out_vals[v] = jnp.where(valid_out, vals, UNBOUND)
+        if node.kind == "left":
+            # backfill: left rows with no match append after the matches,
+            # their free variables staying at the unbound sentinel
+            un = lvalid & (cnt == 0)
+            upos_raw = total + jnp.cumsum(un.astype(jnp.int32)) - 1
+            upos = jnp.where(un & (upos_raw < cap), upos_raw, cap)
+            for v in node.out_vars:
+                if v in lcols:
+                    out_vals[v] = (
+                        out_vals[v].at[upos].set(lcols[v], mode="drop")
+                    )
+            total = total + jnp.sum(un.astype(jnp.int32))
+        self.needed[f"bindC{node.node_id}"] = total
+        return out_vals, jnp.minimum(total, cap)
+
+    def _bind_join_grid(self, node, lcols, lvalid, lo, cnt, by_pos, cap):
+        """Grid expansion fallback for patterns with repeated free
+        variables: pair validity depends on the gathered values, so the
+        (rows x fan-out) grid plus a compaction pass is unavoidable."""
+        cl = lvalid.shape[0]
+        m = self.caps[f"bindM{node.node_id}"]
+        self.needed[f"bindM{node.node_id}"] = jnp.max(cnt, initial=0)
+        offs = jnp.arange(m, dtype=jnp.int32)
+        ridx = jnp.clip(lo[:, None] + offs[None, :], 0, self.store_n - 1)
+        within = offs[None, :] < cnt[:, None]
+        pairmask = within & lvalid[:, None]
+        for pa, pb in node.eq_pairs:
+            pairmask = pairmask & (by_pos[pa][ridx] == by_pos[pb][ridx])
+        out_vals = {}
+        for v in node.out_vars:
+            if v in lcols:
+                mat = jnp.broadcast_to(lcols[v][:, None], (cl, m))
+            else:
+                pos = next(p for p, fv in node.free_slots if fv == v)
+                mat = by_pos[pos][ridx]
+            out_vals[v] = mat.reshape(-1)
+        flat_mask = pairmask.reshape(-1)
+        if node.kind == "left":
+            matched = jnp.sum(pairmask.astype(jnp.int32), axis=1)
+            unmatched = lvalid & (matched == 0)
+            for v in node.out_vars:
+                tail = (
+                    lcols[v]
+                    if v in lcols
+                    else jnp.full(cl, UNBOUND, jnp.int32)
+                )
+                out_vals[v] = jnp.concatenate([out_vals[v], tail])
+            flat_mask = jnp.concatenate([flat_mask, unmatched])
+        cols, n, total = _compact(out_vals, flat_mask, cap)
+        self.needed[f"bindC{node.node_id}"] = total
+        return cols, n
+
+    def _join(self, node: P.Join):
+        lcols, ln = self._eval(node.left)
+        rcols, rn = self._eval(node.right)
+        # zero-variable sides are existence filters: scale the other side
+        if not node.left.out_vars and node.kind == "inner":
+            return rcols, jnp.where(ln > 0, rn, 0)
+        if not node.right.out_vars:
+            if node.kind == "inner":
+                return lcols, jnp.where(rn > 0, ln, 0)
+            return lcols, ln  # OPTIONAL {} with no vars binds nothing
+        if node.build_right:
+            build_cols, bn, probe_cols, pn = rcols, rn, lcols, ln
+        else:
+            build_cols, bn, probe_cols, pn = lcols, ln, rcols, rn
+        cb = len(next(iter(build_cols.values())))
+        cp = len(next(iter(probe_cols.values()))) if probe_cols else 1
+        cap = self.caps[f"joinC{node.node_id}"]
+        pvalid = jnp.arange(cp) < pn
+
+        if node.shared:
+            m = self.caps[f"joinM{node.node_id}"]
+            key = node.shared[0]
+            bk = jnp.where(
+                jnp.arange(cb) < bn, build_cols[key], I32_MAX
+            )
+            order = jnp.argsort(bk, stable=True)
+            skeys = bk[order]
+            pk = jnp.where(pvalid, probe_cols[key], -3)
+            start = jnp.searchsorted(skeys, pk, side="left").astype(jnp.int32)
+            end = jnp.searchsorted(skeys, pk, side="right").astype(jnp.int32)
+            cnt = end - start
+            self.needed[f"joinM{node.node_id}"] = jnp.max(
+                jnp.where(pvalid, cnt, 0), initial=0
+            )
+        else:  # cross join: every valid probe row spans the whole build side
+            m = cb
+            order = jnp.arange(cb, dtype=jnp.int32)
+            start = jnp.zeros(cp, jnp.int32)
+            cnt = jnp.where(pvalid, bn, 0).astype(jnp.int32)
+
+        offs = jnp.arange(m, dtype=jnp.int32)
+        bidx = start[:, None] + offs[None, :]
+        within = offs[None, :] < cnt[:, None]
+        brow = order[jnp.clip(bidx, 0, cb - 1)]
+        pairmask = within & pvalid[:, None]
+        for v in node.shared[1:]:
+            pairmask = pairmask & (
+                build_cols[v][brow] == probe_cols[v][:, None]
+            )
+
+        out_vals: dict[str, jnp.ndarray] = {}
+        for v in node.out_vars:
+            if probe_cols and v in probe_cols:
+                mat = jnp.broadcast_to(probe_cols[v][:, None], (cp, m))
+            else:
+                mat = build_cols[v][brow]
+            out_vals[v] = mat.reshape(-1)
+        flat_mask = pairmask.reshape(-1)
+
+        if node.kind == "left":
+            # unmatched-row backfill: preserved left rows with the optional
+            # side's variables left at the unbound sentinel
+            matched = jnp.sum(pairmask.astype(jnp.int32), axis=1)
+            unmatched = pvalid & (matched == 0)
+            cat_vals = {}
+            for v in node.out_vars:
+                if probe_cols and v in probe_cols:
+                    tail = probe_cols[v]
+                else:
+                    tail = jnp.full(cp, UNBOUND, jnp.int32)
+                cat_vals[v] = jnp.concatenate([out_vals[v], tail])
+            flat_mask = jnp.concatenate([flat_mask, unmatched])
+            out_vals = cat_vals
+
+        cols, n, total = _compact(out_vals, flat_mask, cap)
+        self.needed[f"joinC{node.node_id}"] = total
+        return cols, n
+
+    # -- filters -------------------------------------------------------------
+
+    def _gather_side(self, array, ids):
+        return array[jnp.clip(ids, 0, array.shape[0] - 1)]
+
+    def _cmp(self, c: P.LCmp, cols: dict, cap: int):
+        is_lit, is_num, str_rank, num_rank = self.vt_arrays
+
+        def var_ids(o: P.LOperand):
+            if o.var in cols:
+                return cols[o.var]
+            return jnp.full(cap, UNBOUND, jnp.int32)  # never-bound variable
+
+        def rank_of(o: P.LOperand, table, okmask):
+            ids = var_ids(o)
+            ok = (ids >= 0) & self._gather_side(okmask, ids)
+            return self._gather_side(table, ids), ok
+
+        op = c.op
+        if c.mode in ("num", "str"):
+            table, okmask = (
+                (num_rank, is_num) if c.mode == "num" else (str_rank, is_lit)
+            )
+            rank, ok = rank_of(c.lhs, table, okmask)
+            lo = self.fops[c.rhs.slot]
+            hi = self.fops[c.rhs.slot + 1]
+            present = lo < hi
+            if op == "<":
+                return ok & (rank < lo)
+            if op == "<=":
+                return ok & (rank < hi)
+            if op == ">":
+                return ok & (rank >= hi)
+            if op == ">=":
+                return ok & (rank >= lo)
+            if op == "=":
+                return ok & present & (rank == lo)
+            return ok & ~(present & (rank == lo))  # !=
+        if c.mode == "term":
+            x = var_ids(c.lhs)
+            if c.rhs.kind == "var":
+                y = var_ids(c.rhs)
+                both = (x >= 0) & (y >= 0)
+                return both & ((x == y) if op == "=" else (x != y))
+            cid = self.fops[c.rhs.slot]
+            bound = x >= 0
+            return bound & ((x == cid) if op == "=" else (x != cid))
+        # mode 'vv': ordering between two variables — numeric when both
+        # numeric, else literal-body order when both literals, else false
+        x, y = var_ids(c.lhs), var_ids(c.rhs)
+        bound = (x >= 0) & (y >= 0)
+        xn = self._gather_side(num_rank, x)
+        yn = self._gather_side(num_rank, y)
+        xs = self._gather_side(str_rank, x)
+        ys = self._gather_side(str_rank, y)
+        both_num = self._gather_side(is_num, x) & self._gather_side(is_num, y)
+        both_lit = self._gather_side(is_lit, x) & self._gather_side(is_lit, y)
+
+        def rel(a, b):
+            if op == "<":
+                return a < b
+            if op == "<=":
+                return a <= b
+            if op == ">":
+                return a > b
+            return a >= b
+
+        return bound & jnp.where(
+            both_num, rel(xn, yn), both_lit & rel(xs, ys)
+        )
+
+    def _expr(self, e: P.LExpr, cols: dict, cap: int):
+        if isinstance(e, P.LCmp):
+            return self._cmp(e, cols, cap)
+        if isinstance(e, P.LBound):
+            if e.var in cols:
+                return cols[e.var] >= 0
+            return jnp.zeros(cap, bool)
+        if isinstance(e, P.LNot):
+            return ~self._expr(e.expr, cols, cap)
+        if isinstance(e, P.LAnd):
+            return self._expr(e.lhs, cols, cap) & self._expr(e.rhs, cols, cap)
+        return self._expr(e.lhs, cols, cap) | self._expr(e.rhs, cols, cap)
+
+    def _filter(self, node: P.Filter):
+        cols, n = self._eval(node.child)
+        self._sorted[node.node_id] = self._sorted.get(node.child.node_id, ())
+        if not cols:  # zero-variable table: expr sees only unbound vars
+            cap = 1
+            keep = self._expr(node.expr, cols, cap)
+            return cols, jnp.where(keep[0], n, 0)
+        cap = len(next(iter(cols.values())))
+        mask = self._expr(node.expr, cols, cap) & (jnp.arange(cap) < n)
+        return _compact(cols, mask, cap)[:2]
+
+    # -- tail ----------------------------------------------------------------
+
+    def _already_ordered(self, node) -> bool:
+        """True when the child's known sort sequence already starts with
+        this node's output columns — the determinism sort is a no-op."""
+        child_sorted = self._sorted.get(node.child.node_id, ())
+        return child_sorted[: len(node.out_vars)] == node.out_vars
+
+    def _project(self, node: P.Project):
+        cols, n = self._eval(node.child)
+        child_sorted = self._sorted.get(node.child.node_id, ())
+        kept = []
+        for v in child_sorted:  # dropping a sort column cuts the sequence
+            if v not in node.out_vars:
+                break
+            kept.append(v)
+        self._sorted[node.node_id] = tuple(kept)
+        cap = len(next(iter(cols.values()))) if cols else 1
+        out = {}
+        for v in node.out_vars:
+            out[v] = cols[v] if v in cols else jnp.full(cap, UNBOUND, jnp.int32)
+        return out, n
+
+    def _distinct(self, node: P.Distinct):
+        cols, n = self._eval(node.child)
+        self._sorted[node.node_id] = node.out_vars
+        if not cols:
+            return cols, jnp.minimum(n, 1)
+        cap = len(next(iter(cols.values())))
+        if self._already_ordered(node):
+            sorted_cols, svalid = cols, jnp.arange(cap) < n
+        else:
+            perm, valid = _sort_perm(cols, node.out_vars, n, cap)
+            sorted_cols = {v: c[perm] for v, c in cols.items()}
+            svalid = valid[perm]
+        same_prev = jnp.ones(cap, bool)
+        for v in node.out_vars:
+            c = sorted_cols[v]
+            same_prev = same_prev & jnp.concatenate(
+                [jnp.zeros(1, bool), c[1:] == c[:-1]]
+            )
+        keep = svalid & ~same_prev
+        return _compact(sorted_cols, keep, cap)[:2]
+
+    def _sort(self, node: P.Sort):
+        cols, n = self._eval(node.child)
+        self._sorted[node.node_id] = node.out_vars
+        if not cols:
+            return cols, n
+        if self._already_ordered(node):
+            return cols, n
+        cap = len(next(iter(cols.values())))
+        perm, valid = _sort_perm(cols, node.out_vars, n, cap)
+        return {v: c[perm] for v, c in cols.items()}, n
+
+    # -- dispatch ------------------------------------------------------------
+
+    def _eval(self, node: P.Node):
+        if isinstance(node, P.Scan):
+            return self._scan(node)
+        if isinstance(node, P.BindJoin):
+            return self._bind_join(node)
+        if isinstance(node, P.Join):
+            return self._join(node)
+        if isinstance(node, P.Filter):
+            return self._filter(node)
+        if isinstance(node, P.Project):
+            return self._project(node)
+        if isinstance(node, P.Distinct):
+            return self._distinct(node)
+        if isinstance(node, P.Sort):
+            return self._sort(node)
+        if isinstance(node, P.Limit):
+            cols, n = self._eval(node.child)
+            self._sorted[node.node_id] = self._sorted.get(
+                node.child.node_id, ()
+            )
+            # the limit value is per-query runtime data (plan sharing);
+            # -1 marks a padded batch row, where the count is 0 anyway
+            return cols, jnp.where(
+                self.qlimit >= 0, jnp.minimum(n, self.qlimit), n
+            )
+        raise TypeError(f"unknown plan node {node!r}")
+
+    def run(
+        self, scan_cols_flat, scan_keys_flat, scan_prim_flat,
+        vt_arrays, consts, fops, qvalid, qlimit,
+    ):
+        self.scan_cols = {
+            s.node_id: scan_cols_flat[3 * i : 3 * i + 3]
+            for i, s in enumerate(self.plan.scans)
+        }
+        self.scan_keys = {
+            s.node_id: scan_keys_flat[i] if self.packed else None
+            for i, s in enumerate(self.plan.scans)
+        }
+        self.scan_prim = {
+            s.node_id: scan_prim_flat[i] if self.packed else None
+            for i, s in enumerate(self.plan.scans)
+        }
+        self.vt_arrays = vt_arrays
+        self.consts = consts
+        self.fops = fops
+        self.qvalid = qvalid
+        self.qlimit = qlimit
+        self.needed = {}
+        cols, n = self._eval(self.plan.root)
+        out_cols = tuple(cols.get(v) for v in self.plan.root.out_vars)
+        return out_cols, n, dict(self.needed)
+
+
+# ---------------------------------------------------------------------------
+# the executor
+# ---------------------------------------------------------------------------
+
+
+def _initial_caps(plan: P.Plan, floors: dict[str, int]) -> dict[str, int]:
+    caps: dict[str, int] = {}
+
+    def walk(node: P.Node) -> None:
+        if isinstance(node, P.Scan):
+            if node.out_vars:
+                caps[f"scan{node.node_id}"] = next_pow2(max(node.est, 1))
+            return
+        if isinstance(node, P.BindJoin):
+            walk(node.left)
+            if node.free_slots:
+                if node.eq_pairs:  # grid fallback needs the fan-out cap
+                    caps[f"bindM{node.node_id}"] = 8
+                caps[f"bindC{node.node_id}"] = next_pow2(
+                    min(max(node.est, 16), 1 << 22)
+                )
+            return
+        if isinstance(node, P.Join):
+            walk(node.left)
+            walk(node.right)
+            if node.right.out_vars and (
+                node.left.out_vars or node.kind == "left"
+            ):
+                if node.shared:
+                    caps[f"joinM{node.node_id}"] = 8
+                # clamp the initial guess: a mis-estimated cross join must
+                # not allocate a giant table up front (feedback grows it to
+                # the exact need if the result really is that large)
+                caps[f"joinC{node.node_id}"] = next_pow2(
+                    min(max(node.est, 16), 1 << 22)
+                )
+            return
+        for c in P._children(node):
+            walk(c)
+
+    walk(plan.root)
+    for k, v in floors.items():
+        if k in caps:
+            caps[k] = max(caps[k], v)
+    return caps
+
+
+class Executor:
+    """Per-store query executor: plan cache, capacity memory, compiled
+    pipeline cache.  Get one via :func:`get_executor`."""
+
+    def __init__(self, store: TripleStore):
+        self.store = store
+        self._plans: dict[tuple, P.Plan] = {}
+        self._floors: dict[tuple, dict[str, int]] = {}
+        self._compiled: dict[tuple, callable] = {}
+        self.dispatches = 0  # total jitted pipeline dispatches (for tests)
+
+    # -- plans ---------------------------------------------------------------
+
+    def plan(self, q: A.SelectQuery) -> P.Plan:
+        sig = q.signature()
+        plan = self._plans.get(sig)
+        if plan is None:
+            plan = P.plan_query(self.store, q)
+            self._plans[sig] = plan
+        return plan
+
+    # -- compilation ---------------------------------------------------------
+
+    def _get_compiled(self, plan: P.Plan, caps: dict[str, int], bpad: int):
+        key = (plan.sig, tuple(sorted(caps.items())), bpad)
+        fn = self._compiled.get(key)
+        if fn is None:
+            packed = self.store.device_keys("spo") is not None
+            prim_rounds = (
+                {
+                    s.node_id: self.store.primary_rounds(s.order)
+                    for s in plan.scans
+                }
+                if packed
+                else None
+            )
+            lowerer = _Lowerer(
+                plan,
+                caps,
+                max(self.store.n_triples, 1),
+                self.store.KEY_BITS,
+                packed,
+                prim_rounds,
+            )
+
+            def single(
+                scan_cols_flat, scan_keys_flat, scan_prim_flat,
+                vt_arrays, consts, fops, qvalid, qlimit,
+            ):
+                return lowerer.run(
+                    scan_cols_flat, scan_keys_flat, scan_prim_flat,
+                    vt_arrays, consts, fops, qvalid, qlimit,
+                )
+
+            fn = jax.jit(
+                jax.vmap(
+                    single, in_axes=(None, None, None, None, 0, 0, 0, 0)
+                )
+            )
+            self._compiled[key] = fn
+        return fn
+
+    # -- execution -----------------------------------------------------------
+
+    def execute(
+        self, plan: P.Plan, queries: list[A.SelectQuery]
+    ) -> BatchResult:
+        """Run signature-equal ``queries`` as one micro-batch: encode each
+        query's constants, then dispatch through
+        :meth:`execute_encoded`."""
+        store = self.store
+        bsz = len(queries)
+        consts = np.full((bsz, len(plan.scans), 3), -2, np.int32)
+        fops = np.zeros((bsz, max(plan.n_filter_ops, 1)), np.int32)
+        vt = value_table(store) if plan.has_filters else None
+        for i, q in enumerate(queries):
+            consts[i] = P.encode_scan_consts(store, plan, q)
+            if plan.n_filter_ops:
+                fops[i] = P.encode_filter_ops(store, vt, q.filters)
+        limits = np.asarray(
+            [-1 if q.limit is None else q.limit for q in queries], np.int32
+        )
+        return self.execute_encoded(plan, consts, fops, limits)
+
+    def execute_encoded(
+        self,
+        plan: P.Plan,
+        consts: np.ndarray,
+        fops: np.ndarray | None = None,
+        limits: np.ndarray | None = None,
+    ) -> BatchResult:
+        """The pre-encoded hot path (the benchmark's unit of work): run a
+        ``[B, n_scans, 3]`` int32 constants batch (``-1`` variable slot,
+        ``-2`` unknown constant) plus optional ``[B, n_filter_ops]`` filter
+        operands, padded to a power-of-two batch, re-dispatching only when
+        a capacity was exceeded."""
+        store = self.store
+        out_vars = plan.root.out_vars
+        bsz = consts.shape[0]
+        if store.n_triples == 0:
+            return BatchResult(
+                store=store,
+                vars=out_vars,
+                cols={v: np.full((bsz, 1), -1, np.int32) for v in out_vars},
+                counts=np.zeros(bsz, np.int64),
+            )
+        bpad = next_pow2(max(bsz, 1))
+        if fops is None:
+            fops = np.zeros((bsz, max(plan.n_filter_ops, 1)), np.int32)
+        if limits is None:
+            limits = np.full(bsz, -1, np.int32)
+        if bpad > bsz:
+            consts = np.concatenate(
+                [consts, np.full((bpad - bsz, len(plan.scans), 3), -2, np.int32)]
+            )
+            fops = np.concatenate(
+                [fops, np.zeros((bpad - bsz, fops.shape[1]), np.int32)]
+            )
+            limits = np.concatenate(
+                [limits, np.full(bpad - bsz, -1, np.int32)]
+            )
+        qvalid = np.zeros(bpad, bool)
+        qvalid[:bsz] = True
+        vt = value_table(store) if plan.has_filters else None
+
+        scan_cols_flat = tuple(
+            c for s in plan.scans for c in store.device_cols(s.order)
+        )
+        if store.device_keys("spo") is not None:
+            scan_keys_flat = tuple(
+                store.device_keys(s.order) for s in plan.scans
+            )
+            scan_prim_flat = tuple(
+                store.device_primary_starts(s.order) for s in plan.scans
+            )
+        else:
+            z = jnp.zeros(1, jnp.int32)
+            scan_keys_flat = ((z, z),) * len(plan.scans)
+            scan_prim_flat = (z,) * len(plan.scans)
+        if plan.has_filters:
+            vt_arrays = (vt.is_lit, vt.is_num, vt.str_rank, vt.num_rank)
+        else:
+            z = jnp.zeros(1, bool)
+            vt_arrays = (z, z, jnp.zeros(1, jnp.int32), jnp.zeros(1, jnp.int32))
+
+        floors = self._floors.setdefault(plan.sig, {})
+        caps = _initial_caps(plan, floors)
+        consts_j = jnp.asarray(consts)
+        fops_j = jnp.asarray(fops)
+        qvalid_j = jnp.asarray(qvalid)
+        qlimit_j = jnp.asarray(limits)
+        for _ in range(_MAX_GROW_ROUNDS):
+            fn = self._get_compiled(plan, caps, bpad)
+            out_cols, n, needed = fn(
+                scan_cols_flat, scan_keys_flat, scan_prim_flat, vt_arrays,
+                consts_j, fops_j, qvalid_j, qlimit_j,
+            )
+            self.dispatches += 1
+            grown = False
+            for k, arr in needed.items():
+                want = int(np.max(np.asarray(arr)))
+                if want > caps[k]:
+                    caps[k] = next_pow2(want)
+                    floors[k] = max(floors.get(k, 0), caps[k])
+                    grown = True
+            if not grown:
+                break
+        else:
+            raise RuntimeError(
+                "executor capacity feedback did not converge "
+                f"(caps={caps}) — pathological query?"
+            )
+        counts = np.asarray(n)[:bsz].astype(np.int64)
+        cols = {
+            v: np.asarray(c)[:bsz]
+            for v, c in zip(out_vars, out_cols)
+        } if out_cols else {}
+        return BatchResult(
+            store=store, vars=out_vars, cols=cols, counts=counts
+        )
+
+    def solve(self, q: A.SelectQuery) -> BatchResult:
+        return self.execute(self.plan(q), [q])
+
+
+def get_executor(store: TripleStore) -> Executor:
+    ex = getattr(store, "_serve_executor", None)
+    if ex is None:
+        ex = Executor(store)
+        store._serve_executor = ex
+    return ex
+
+
+def solve_select(store: TripleStore, q: A.SelectQuery) -> BatchResult:
+    """One-shot convenience: plan + execute a single query."""
+    return get_executor(store).solve(q)

@@ -1,0 +1,179 @@
+"""Naive full-algebra oracle — the tests' ground truth for ``repro.serve``.
+
+Extends the BGP-only set-scan oracle (``repro.kg.query.oracle_solve``) to
+the whole SPARQL-lite algebra: OPTIONAL, FILTER, projection, DISTINCT and
+LIMIT.  Everything is quadratic, string-based Python over the *decoded*
+triple list — it deliberately shares no code with the indexed, jitted
+engine (same philosophy as the kg oracle), except the single
+number-parsing rule (:func:`repro.serve.values.parse_number`), which is a
+semantic definition, not an implementation detail.
+
+Rows come back deterministically ordered — sorted by rendered term per
+column, unbound (``None``) first — which is exactly the engine's term-id
+order, because term ids are ranks of rendered term strings.
+"""
+
+from __future__ import annotations
+
+from repro.data.terms import unescape_literal
+from repro.kg.query import TriplePattern
+from repro.kg.store import TripleStore
+from repro.serve import algebra as A
+from repro.serve.values import parse_number
+
+
+def _decoded_triples(store: TripleStore) -> list[tuple[str, str, str]]:
+    return [
+        (
+            store.decode_term(int(store.s[i])),
+            store.decode_term(int(store.p[i])),
+            store.decode_term(int(store.o[i])),
+        )
+        for i in range(store.n_triples)
+    ]
+
+
+def _match_bgp(
+    triples: list[tuple[str, str, str]], patterns: tuple[TriplePattern, ...]
+) -> list[dict[str, str]]:
+    """Brute-force conjunctive matching: every pattern against every triple,
+    then pairwise compatible merge."""
+
+    def match_one(pat: TriplePattern) -> list[dict[str, str]]:
+        out = []
+        for t in triples:
+            env: dict[str, str] | None = {}
+            for term, value in zip(pat.slots, t):
+                if term.startswith("?"):
+                    if env.get(term, value) != value:
+                        env = None
+                        break
+                    env[term] = value
+                elif term != value:
+                    env = None
+                    break
+            if env is not None:
+                out.append(env)
+        return out
+
+    solutions: list[dict[str, str]] = [{}]
+    for pat in patterns:
+        rows = match_one(pat)
+        solutions = [
+            {**env, **row}
+            for env in solutions
+            for row in rows
+            if all(env.get(v, row[v]) == row[v] for v in row)
+        ]
+    return solutions
+
+
+def _is_literal(term: str | None) -> bool:
+    return term is not None and term.startswith('"')
+
+
+def _body(term: str) -> str:
+    return unescape_literal(term[1:-1])
+
+
+def _numeric(term: str | None) -> float | None:
+    if not _is_literal(term):
+        return None
+    return parse_number(_body(term))
+
+
+def _operand_term(op: A.Operand, env: dict[str, str]) -> str | None:
+    if isinstance(op, A.Var):
+        return env.get(op.name)
+    if isinstance(op, A.TermConst):
+        return op.term
+    raise TypeError(op)
+
+
+def _eval_cmp(c: A.Cmp, env: dict[str, str]) -> bool:
+    import operator
+
+    rel = {
+        "<": operator.lt, "<=": operator.le, ">": operator.gt,
+        ">=": operator.ge, "=": operator.eq, "!=": operator.ne,
+    }[c.op]
+    # numeric comparison: any NumConst operand
+    if isinstance(c.lhs, A.NumConst) or isinstance(c.rhs, A.NumConst):
+        def num(op: A.Operand) -> float | None:
+            if isinstance(op, A.NumConst):
+                return op.value
+            return _numeric(_operand_term(op, env))
+
+        lv, rv = num(c.lhs), num(c.rhs)
+        return lv is not None and rv is not None and rel(lv, rv)
+    if c.op in ("=", "!="):
+        # term identity (both sides must be bound; type errors are false)
+        lt = _operand_term(c.lhs, env)
+        rt = _operand_term(c.rhs, env)
+        return lt is not None and rt is not None and rel(lt, rt)
+    if isinstance(c.lhs, A.TermConst) or isinstance(c.rhs, A.TermConst):
+        # string-order comparison against a quoted literal constant
+        def body(op: A.Operand) -> str | None:
+            t = _operand_term(op, env)
+            return _body(t) if _is_literal(t) else None
+
+        lb, rb = body(c.lhs), body(c.rhs)
+        return lb is not None and rb is not None and rel(lb, rb)
+    # var-vs-var ordering: numeric when both numeric, else literal-body
+    # order when both are literals, else false
+    lt = _operand_term(c.lhs, env)
+    rt = _operand_term(c.rhs, env)
+    ln, rn = _numeric(lt), _numeric(rt)
+    if ln is not None and rn is not None:
+        return rel(ln, rn)
+    if _is_literal(lt) and _is_literal(rt):
+        return rel(_body(lt), _body(rt))
+    return False
+
+
+def _eval_expr(e: A.Expr, env: dict[str, str]) -> bool:
+    if isinstance(e, A.Cmp):
+        return _eval_cmp(e, env)
+    if isinstance(e, A.Bound):
+        return env.get(e.var.name) is not None
+    if isinstance(e, A.Not):
+        return not _eval_expr(e.expr, env)
+    if isinstance(e, A.And):
+        return _eval_expr(e.lhs, env) and _eval_expr(e.rhs, env)
+    if isinstance(e, A.Or):
+        return _eval_expr(e.lhs, env) or _eval_expr(e.rhs, env)
+    raise TypeError(e)
+
+
+def oracle_select(store: TripleStore, q: A.SelectQuery) -> list[tuple]:
+    """Evaluate ``q`` naively; rows are tuples of rendered terms (``None``
+    for unbound) over ``q.out_vars()``, deterministically sorted, with
+    DISTINCT and LIMIT applied — directly comparable to
+    ``BatchResult.rows(i)``."""
+    triples = _decoded_triples(store)
+    sols = _match_bgp(triples, q.patterns)
+    for group in q.optionals:
+        gsols = _match_bgp(triples, group)
+        joined: list[dict[str, str]] = []
+        for env in sols:
+            hits = [
+                g
+                for g in gsols
+                if all(env.get(v, g[v]) == g[v] for v in g)
+            ]
+            if hits:
+                joined.extend({**env, **g} for g in hits)
+            else:
+                joined.append(env)
+        sols = joined
+    sols = [
+        env for env in sols if all(_eval_expr(f, env) for f in q.filters)
+    ]
+    out_vars = q.out_vars()
+    rows = [tuple(env.get(v) for v in out_vars) for env in sols]
+    if q.distinct:
+        rows = list(dict.fromkeys(rows))
+    rows.sort(key=lambda r: tuple("" if t is None else t for t in r))
+    if q.limit is not None:
+        rows = rows[: q.limit]
+    return rows

@@ -1,0 +1,634 @@
+"""Cost-based planner — SelectQuery -> operator tree for the fused executor.
+
+Generalizes the join-ordering logic that used to live inline in
+``repro.kg.query.solve``: every scan's cardinality is *measured* from the
+SPO/POS/OSP index statistics (a pattern is a contiguous range of one sort
+order, so its exact count is two binary searches — the cheapest perfect
+estimator there is), and the required BGP is folded greedily smallest-first
+while always preferring a scan *connected* to the accumulated scope; a
+disconnected scan cross-joins only when no connected one remains.
+
+Placement rules:
+
+* filters are pushed to the earliest point where every eventually-bound
+  variable they mention is in scope (a filter over optional-only variables
+  waits until after that ``LeftJoin``);
+* ``OPTIONAL`` groups are planned as their own sub-pipelines (same greedy
+  fold) and attached with ``LeftJoin`` after the required part;
+* the tail is ``Project -> Distinct | Sort -> Limit`` — the engine always
+  sorts final binding tables by term id, so results are deterministically
+  ordered (and, because term ids are ranks of rendered terms, identical
+  across eager / streamed / ``.kgz``-roundtripped stores).
+
+The plan is structure-only: constants live in per-query operand vectors
+(:func:`encode_scan_consts` / :func:`encode_filter_ops`), so one plan (and
+one compiled pipeline) serves every query with the same
+:meth:`~repro.serve.algebra.SelectQuery.signature` — the unit the server
+micro-batches on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+import numpy as np
+
+from repro.kg.query import _ORDER_FOR_MASK, TriplePattern, match_counts
+from repro.kg.store import TripleStore
+from repro.serve import algebra as A
+from repro.serve.values import ValueTable
+
+# ---------------------------------------------------------------------------
+# lowered filter expressions (constants -> operand-vector slots)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LOperand:
+    kind: str          # 'var' | 'const'
+    var: str | None    # for kind == 'var'
+    slot: int          # start index into the filter-operand vector
+    width: int         # ints this operand occupies (0 for vars)
+
+
+@dataclasses.dataclass(frozen=True)
+class LCmp:
+    op: str            # normalized: constants only ever on the rhs
+    mode: str          # 'num' | 'str' | 'term' | 'vv'
+    lhs: LOperand
+    rhs: LOperand
+
+
+@dataclasses.dataclass(frozen=True)
+class LBound:
+    var: str
+
+
+@dataclasses.dataclass(frozen=True)
+class LNot:
+    expr: "LExpr"
+
+
+@dataclasses.dataclass(frozen=True)
+class LAnd:
+    lhs: "LExpr"
+    rhs: "LExpr"
+
+
+@dataclasses.dataclass(frozen=True)
+class LOr:
+    lhs: "LExpr"
+    rhs: "LExpr"
+
+
+LExpr = Union[LCmp, LBound, LNot, LAnd, LOr]
+
+_FLIP = {"<": ">", ">": "<", "<=": ">=", ">=": "<=", "=": "=", "!=": "!="}
+
+
+def _cmp_mode(c: A.Cmp) -> str:
+    if isinstance(c.lhs, A.NumConst) or isinstance(c.rhs, A.NumConst):
+        return "num"
+    if c.op in ("=", "!="):
+        return "term"
+    if isinstance(c.lhs, A.TermConst) or isinstance(c.rhs, A.TermConst):
+        return "str"
+    return "vv"  # var-vs-var ordering: numeric if both numeric, else string
+
+
+def _operand_width(op: A.Operand, mode: str) -> int:
+    if isinstance(op, A.Var):
+        return 0
+    if mode in ("num", "str"):
+        return 2  # (lo, hi) rank bounds
+    return 1      # term id
+
+
+def _lower_expr(e: A.Expr, cursor: list[int]) -> LExpr:
+    if isinstance(e, A.Cmp):
+        op, lhs, rhs = e.op, e.lhs, e.rhs
+        if not isinstance(lhs, A.Var):  # normalize: constant to the rhs
+            op, lhs, rhs = _FLIP[op], rhs, lhs
+        mode = _cmp_mode(e)
+
+        def low(x: A.Operand) -> LOperand:
+            w = _operand_width(x, mode)
+            slot = cursor[0]
+            cursor[0] += w
+            return LOperand(
+                kind="var" if isinstance(x, A.Var) else "const",
+                var=x.name if isinstance(x, A.Var) else None,
+                slot=slot,
+                width=w,
+            )
+
+        return LCmp(op=op, mode=mode, lhs=low(lhs), rhs=low(rhs))
+    if isinstance(e, A.Bound):
+        return LBound(e.var.name)
+    if isinstance(e, A.Not):
+        return LNot(_lower_expr(e.expr, cursor))
+    if isinstance(e, A.And):
+        return LAnd(_lower_expr(e.lhs, cursor), _lower_expr(e.rhs, cursor))
+    return LOr(_lower_expr(e.lhs, cursor), _lower_expr(e.rhs, cursor))
+
+
+def encode_filter_ops(
+    store: TripleStore, vt: ValueTable | None, filters: tuple[A.Expr, ...]
+) -> np.ndarray:
+    """Per-query filter constants -> one int32 operand vector, in the same
+    depth-first order :func:`_lower_expr` assigned slots (signature-equal
+    queries produce identically-shaped vectors)."""
+    out: list[int] = []
+
+    def enc_operand(x: A.Operand, mode: str) -> None:
+        if isinstance(x, A.Var):
+            return
+        assert vt is not None
+        if mode == "num":
+            assert isinstance(x, A.NumConst)
+            out.extend(vt.num_bounds(x.value))
+        elif mode == "str":
+            assert isinstance(x, A.TermConst)
+            out.extend(vt.str_bounds(x.body))
+        else:  # term identity
+            assert isinstance(x, A.TermConst)
+            tid = store.term_id(x.term)
+            out.append(-2 if tid is None else tid)
+
+    def walk(e: A.Expr) -> None:
+        if isinstance(e, A.Cmp):
+            op, lhs, rhs = e.op, e.lhs, e.rhs
+            if not isinstance(lhs, A.Var):
+                lhs, rhs = rhs, lhs
+            mode = _cmp_mode(e)
+            enc_operand(lhs, mode)
+            enc_operand(rhs, mode)
+        elif isinstance(e, A.Not):
+            walk(e.expr)
+        elif isinstance(e, (A.And, A.Or)):
+            walk(e.lhs)
+            walk(e.rhs)
+
+    for f in filters:
+        walk(f)
+    return np.asarray(out, np.int32)
+
+
+# ---------------------------------------------------------------------------
+# plan nodes
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Scan:
+    node_id: int
+    pattern_pos: int                         # index into query.all_patterns()
+    order: str                               # spo | pos | osp
+    const_slots: tuple[int, ...]             # triple positions bound by consts
+    var_slots: tuple[tuple[int, str], ...]   # (position, var) first occurrences
+    eq_pairs: tuple[tuple[int, int], ...]    # repeated-var position pairs
+    out_vars: tuple[str, ...]
+    est: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Join:
+    node_id: int
+    left: "Node"
+    right: "Node"
+    shared: tuple[str, ...]
+    kind: str                                # 'inner' | 'left'
+    build_right: bool                        # which side the sorted build is
+    out_vars: tuple[str, ...]
+    est: int
+
+
+@dataclasses.dataclass(frozen=True)
+class BindJoin:
+    """Index nested-loop join: instead of scanning the pattern
+    independently and merge-joining, each left-side row *binds* its shared
+    variables into the pattern's range scan (they become part of the bound
+    prefix of the index lookup).  This is what makes an anchored star BGP
+    cheap — the unanchored pattern is never materialized."""
+
+    node_id: int
+    left: "Node"
+    pattern_pos: int
+    order: str
+    const_slots: tuple[int, ...]
+    bound_slots: tuple[tuple[int, str], ...]  # (position, left-bound var)
+    free_slots: tuple[tuple[int, str], ...]   # (position, newly bound var)
+    eq_pairs: tuple[tuple[int, int], ...]     # repeated free-var positions
+    kind: str                                 # 'inner' | 'left'
+    out_vars: tuple[str, ...]
+    est: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Filter:
+    node_id: int
+    child: "Node"
+    expr: LExpr
+    out_vars: tuple[str, ...]
+    est: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Project:
+    node_id: int
+    child: "Node"
+    out_vars: tuple[str, ...]
+    est: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Distinct:
+    node_id: int
+    child: "Node"
+    out_vars: tuple[str, ...]
+    est: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Sort:
+    node_id: int
+    child: "Node"
+    out_vars: tuple[str, ...]
+    est: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Limit:
+    node_id: int
+    child: "Node"
+    n: int
+    out_vars: tuple[str, ...]
+    est: int
+
+
+Node = Union[Scan, BindJoin, Join, Filter, Project, Distinct, Sort, Limit]
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    sig: tuple
+    root: Node
+    # pattern readers (Scan | BindJoin) in pipeline order; reader i takes
+    # constants row i of the per-query consts matrix
+    scans: tuple[Union[Scan, BindJoin], ...]
+    n_filter_ops: int
+    has_filters: bool
+
+    def explain(self, indent: str = "") -> str:
+        """Human-readable operator tree (cost annotations included)."""
+        lines: list[str] = []
+
+        def walk(node: Node, depth: int) -> None:
+            pad = indent + "  " * depth
+            if isinstance(node, Scan):
+                lines.append(
+                    f"{pad}Scan[{node.order}] pattern#{node.pattern_pos} "
+                    f"vars={list(node.out_vars)} est={node.est}"
+                )
+                return
+            name = type(node).__name__
+            extra = ""
+            if isinstance(node, Join):
+                extra = (
+                    f" {node.kind} on={list(node.shared) or 'x'} "
+                    f"build={'right' if node.build_right else 'left'}"
+                )
+            if isinstance(node, BindJoin):
+                extra = (
+                    f" {node.kind} pattern#{node.pattern_pos}[{node.order}] "
+                    f"bind={[v for _, v in node.bound_slots]} "
+                    f"+{[v for _, v in node.free_slots]}"
+                )
+            if isinstance(node, Limit):
+                extra = f" n={node.n}"
+            lines.append(f"{pad}{name}{extra} est={node.est}")
+            for child in _children(node):
+                walk(child, depth + 1)
+
+        walk(self.root, 0)
+        return "\n".join(lines)
+
+
+def _children(node: Node) -> tuple[Node, ...]:
+    if isinstance(node, Scan):
+        return ()
+    if isinstance(node, Join):
+        return (node.left, node.right)
+    if isinstance(node, BindJoin):
+        return (node.left,)
+    return (node.child,)
+
+
+# ---------------------------------------------------------------------------
+# the planner
+# ---------------------------------------------------------------------------
+
+
+def _scan_estimates(
+    store: TripleStore, patterns: tuple[TriplePattern, ...]
+) -> list[int]:
+    """Exact per-pattern cardinalities from the index statistics.  A pattern
+    holding a constant the store has never seen is 0 without touching the
+    index."""
+    ids = np.full((len(patterns), 3), -1, np.int32)
+    resolvable = np.ones(len(patterns), bool)
+    for i, pat in enumerate(patterns):
+        for j, term in enumerate(pat.slots):
+            if term.startswith("?"):
+                continue
+            tid = store.term_id(term)
+            if tid is None:
+                resolvable[i] = False
+            else:
+                ids[i, j] = tid
+    ests = np.zeros(len(patterns), np.int64)
+    live = np.nonzero(resolvable)[0]
+    if len(live) and store.n_triples:
+        ests[live] = match_counts(store, ids[live])
+    return [int(e) for e in ests]
+
+
+class _Builder:
+    def __init__(self) -> None:
+        self._next = 0
+
+    def nid(self) -> int:
+        n = self._next
+        self._next += 1
+        return n
+
+    def scan(self, pattern_pos: int, pat: TriplePattern, est: int) -> Scan:
+        const_slots, var_slots, eq_pairs = [], [], []
+        first: dict[str, int] = {}
+        for pos, term in enumerate(pat.slots):
+            if not term.startswith("?"):
+                const_slots.append(pos)
+            elif term in first:
+                eq_pairs.append((first[term], pos))
+            else:
+                first[term] = pos
+                var_slots.append((pos, term))
+        mask = tuple(not t.startswith("?") for t in pat.slots)
+        return Scan(
+            node_id=self.nid(),
+            pattern_pos=pattern_pos,
+            order=_ORDER_FOR_MASK[mask],
+            const_slots=tuple(const_slots),
+            var_slots=tuple(var_slots),
+            eq_pairs=tuple(eq_pairs),
+            out_vars=tuple(v for _, v in var_slots),
+            est=est,
+        )
+
+    def join(self, left: Node, right: Node, kind: str) -> Join:
+        shared = tuple(v for v in left.out_vars if v in right.out_vars)
+        out = left.out_vars + tuple(
+            v for v in right.out_vars if v not in left.out_vars
+        )
+        if shared:
+            est = max(left.est, right.est)
+        else:
+            est = left.est * max(right.est, 1) if kind == "left" else (
+                left.est * right.est
+            )
+        # the sorted build side is the smaller one; LeftJoin must probe with
+        # the (preserved) left side, so its build is always the right
+        build_right = True if kind == "left" else right.est <= left.est
+        return Join(
+            node_id=self.nid(),
+            left=left,
+            right=right,
+            shared=shared,
+            kind=kind,
+            build_right=build_right,
+            out_vars=out,
+            est=max(int(est), 0),
+        )
+
+    def bind_join(self, left: Node, scan: Scan, kind: str) -> BindJoin:
+        """Rewrite ``left JOIN scan`` as an index nested-loop join: the
+        scan's variables already bound on the left become part of the
+        index lookup's bound prefix."""
+        const_slots = list(scan.const_slots)
+        bound_slots, free_slots, eq_pairs = [], [], []
+        first_free: dict[str, int] = {}
+        for pos, v in scan.var_slots:
+            if v in left.out_vars:
+                bound_slots.append((pos, v))
+            elif v in first_free:
+                eq_pairs.append((first_free[v], pos))
+            else:
+                first_free[v] = pos
+                free_slots.append((pos, v))
+        # a repeated variable whose first slot is bound binds every slot
+        for pa, pb in scan.eq_pairs:
+            var = next(v for p, v in scan.var_slots if p == pa)
+            if var in left.out_vars:
+                bound_slots.append((pb, var))
+            else:
+                eq_pairs.append((pa, pb))
+        mask = tuple(
+            pos in const_slots or any(p == pos for p, _ in bound_slots)
+            for pos in range(3)
+        )
+        return BindJoin(
+            node_id=self.nid(),
+            left=left,
+            pattern_pos=scan.pattern_pos,
+            order=_ORDER_FOR_MASK[mask],
+            const_slots=tuple(const_slots),
+            bound_slots=tuple(bound_slots),
+            free_slots=tuple(free_slots),
+            eq_pairs=tuple(eq_pairs),
+            kind=kind,
+            out_vars=left.out_vars + tuple(v for _, v in free_slots),
+            est=max(left.est, 16),
+        )
+
+    def combine(self, left: Node, scan: Scan, kind: str = "inner") -> Node:
+        """Pick the physical join: a scan sharing variables with the
+        accumulated scope bind-joins when its independent cardinality
+        exceeds the left side's (never materialize the big unanchored
+        side); otherwise the sorted-merge join over both materialized
+        sides wins."""
+        shared = [v for v in scan.out_vars if v in left.out_vars]
+        if (
+            shared
+            and left.out_vars
+            and (kind == "left" or scan.est > left.est)
+        ):
+            return self.bind_join(left, scan, kind)
+        return self.join(left, scan, kind)
+
+    def filter(self, child: Node, expr: LExpr) -> Filter:
+        return Filter(
+            node_id=self.nid(),
+            child=child,
+            expr=expr,
+            out_vars=child.out_vars,
+            est=child.est,
+        )
+
+
+def _fold_bgp(
+    b: _Builder,
+    scans: list[Scan],
+    attach_filters=None,
+) -> Node:
+    """Greedy smallest-first fold preferring connected scans; optionally
+    calls ``attach_filters(node) -> node`` after every step so filters apply
+    as soon as their variables are in scope."""
+    remaining = sorted(scans, key=lambda s: (s.est, s.node_id))
+    node: Node = remaining.pop(0)
+    if attach_filters is not None:
+        node = attach_filters(node)
+    while remaining:
+        i = next(
+            (
+                j
+                for j, s in enumerate(remaining)
+                if not s.out_vars or not node.out_vars
+                or any(v in node.out_vars for v in s.out_vars)
+            ),
+            0,  # nothing connected: cross-join the smallest remaining
+        )
+        node = b.combine(node, remaining.pop(i))
+        if attach_filters is not None:
+            node = attach_filters(node)
+    return node
+
+
+def plan_query(store: TripleStore, q: A.SelectQuery) -> Plan:
+    """Build the operator tree for ``q`` over ``store``.  Cardinalities come
+    from the representative query's constants; signature-equal queries reuse
+    the plan (the executor's capacity feedback absorbs the variance)."""
+    b = _Builder()
+    flat = q.all_patterns()
+    ests = _scan_estimates(store, flat)
+
+    # lower filters once (slot assignment is query-structure-deterministic)
+    cursor = [0]
+    lowered = tuple(_lower_expr(f, cursor) for f in q.filters)
+    n_filter_ops = cursor[0]
+    eventually_bound = set(q.scope())
+    required_vars = {v for pat in q.patterns for v in pat.variables}
+    pending = list(zip(lowered, (A.expr_variables(f) for f in q.filters)))
+    pending = [(e, tuple(vs)) for e, (vs) in pending]
+
+    def ready(filter_vars: tuple[str, ...], scope: tuple[str, ...]) -> bool:
+        return all(
+            (v in scope) or (v not in eventually_bound) for v in filter_vars
+        )
+
+    def attach(node: Node) -> Node:
+        changed = True
+        while changed:
+            changed = False
+            for i, (expr, fvars) in enumerate(pending):
+                # inside the required fold only filters that never touch
+                # optional-bound variables may run (OPTIONAL can still add
+                # rows/bindings these filters must see)
+                if all(
+                    v in required_vars or v not in eventually_bound
+                    for v in fvars
+                ) and ready(fvars, node.out_vars):
+                    node = b.filter(node, expr)
+                    pending.pop(i)
+                    changed = True
+                    break
+        return node
+
+    scan_list: list[Scan] = []
+    required_scans = []
+    for pos, pat in enumerate(q.patterns):
+        s = b.scan(pos, pat, ests[pos])
+        required_scans.append(s)
+        scan_list.append(s)
+    node = _fold_bgp(b, required_scans, attach_filters=attach)
+
+    pos0 = len(q.patterns)
+    for group in q.optionals:
+        gscans = []
+        for k, pat in enumerate(group):
+            s = b.scan(pos0 + k, pat, ests[pos0 + k])
+            gscans.append(s)
+            scan_list.append(s)
+        pos0 += len(group)
+        if len(gscans) == 1:
+            # the common OPTIONAL shape: one pattern, bind-joined with
+            # unmatched-row backfill (never materialized on its own)
+            node = b.combine(node, gscans[0], "left")
+        else:
+            gnode = _fold_bgp(b, gscans)
+            node = b.join(node, gnode, "left")
+        # filters whose variables just became bound (optional vars) attach now
+        for i in range(len(pending) - 1, -1, -1):
+            expr, fvars = pending[i]
+            if ready(fvars, node.out_vars):
+                node = b.filter(node, expr)
+                pending.pop(i)
+
+    # any filter still pending mentions only never-bound variables
+    for expr, _ in pending:
+        node = b.filter(node, expr)
+
+    out_vars = q.out_vars()
+    node = Project(
+        node_id=b.nid(), child=node, out_vars=out_vars, est=node.est
+    )
+    if q.distinct:
+        node = Distinct(
+            node_id=b.nid(), child=node, out_vars=out_vars, est=node.est
+        )
+    else:
+        # Distinct leaves rows sorted; otherwise sort explicitly so results
+        # are deterministically ordered by term id
+        node = Sort(node_id=b.nid(), child=node, out_vars=out_vars, est=node.est)
+    if q.limit is not None:
+        node = Limit(
+            node_id=b.nid(),
+            child=node,
+            n=q.limit,
+            out_vars=out_vars,
+            est=min(node.est, q.limit),
+        )
+    # pattern readers must be listed in pipeline (fold) order for the
+    # consts matrix; recover that order from the tree
+    ordered: list[Union[Scan, BindJoin]] = []
+
+    def collect(n: Node) -> None:
+        for c in _children(n):
+            collect(c)
+        if isinstance(n, (Scan, BindJoin)):
+            ordered.append(n)
+
+    collect(node)
+    return Plan(
+        sig=q.signature(),
+        root=node,
+        scans=tuple(ordered),
+        n_filter_ops=n_filter_ops,
+        has_filters=bool(q.filters),
+    )
+
+
+def encode_scan_consts(
+    store: TripleStore, plan: Plan, q: A.SelectQuery
+) -> np.ndarray:
+    """Per-query constant term ids, one (s, p, o) row per plan scan: ``-1``
+    marks a variable slot, ``-2`` a constant the store has never seen (its
+    range scan comes back empty)."""
+    flat = q.all_patterns()
+    out = np.full((len(plan.scans), 3), -1, np.int32)
+    for i, scan in enumerate(plan.scans):
+        pat = flat[scan.pattern_pos]
+        for pos in scan.const_slots:
+            tid = store.term_id(pat.slots[pos])
+            out[i, pos] = -2 if tid is None else tid
+    return out

@@ -1,0 +1,298 @@
+"""Long-lived batching query server over one open ``.kgz`` store.
+
+Wire protocol (newline-delimited JSON over a local TCP socket; one JSON
+object per line, one response line per request, ``id`` echoed back):
+
+    -> {"id": 1, "query": "SELECT ?g WHERE { ?m <p> ?g } LIMIT 5"}
+    <- {"id": 1, "vars": ["?g"], "rows": [["<g0>"]], "n_total": 12,
+        "batch_size": 3, "latency_ms": 1.9}
+
+    -> {"id": 2, "query": "...", "limit": 10}     # decode at most 10 rows
+       (without "limit", decoded rows are capped at ``max_rows`` — 1000 by
+       default; "n_total" always reports the full solution count)
+    -> {"op": "ping"}                              <- {"ok": true}
+    -> {"op": "stats"}                             <- running counters
+    -> {"op": "explain", "query": "..."}           <- the planned operator tree
+
+Errors come back as ``{"id": ..., "error": "..."}``; ``rows`` hold rendered
+N-Triples terms with ``null`` for unbound (OPTIONAL-miss) variables.
+
+Batching: connection threads only parse and enqueue; a single dispatcher
+thread drains the queue (a short linger lets concurrent clients pile up),
+groups in-flight requests by plan *signature* — the structural identity of
+a query with constants abstracted — and executes every group as ONE
+batched device dispatch through the fused ``repro.serve.exec`` pipeline.
+Per-batch latency and queries/s are tracked in :class:`ServerStats` and
+logged to stderr (rate-limited).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import queue
+import socket
+import sys
+import threading
+import time
+
+from repro.kg.store import TripleStore
+from repro.serve import algebra
+from repro.serve.exec import Executor, get_executor
+
+
+@dataclasses.dataclass
+class ServerStats:
+    queries: int = 0
+    batches: int = 0
+    errors: int = 0
+    busiest_batch: int = 0
+    total_exec_s: float = 0.0
+
+    def as_dict(self) -> dict:
+        qps = self.queries / self.total_exec_s if self.total_exec_s else 0.0
+        return {
+            "queries": self.queries,
+            "batches": self.batches,
+            "errors": self.errors,
+            "busiest_batch": self.busiest_batch,
+            "mean_batch": self.queries / self.batches if self.batches else 0.0,
+            "exec_queries_per_s": qps,
+        }
+
+
+@dataclasses.dataclass
+class _Pending:
+    query: algebra.SelectQuery
+    req_id: object
+    limit: int | None
+    reply: "callable"
+
+
+class KGServer:
+    """Serve one immutable store; see the module docstring for protocol."""
+
+    def __init__(
+        self,
+        store: TripleStore,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        max_batch: int = 4096,
+        linger_ms: float = 2.0,
+        max_rows: int = 1000,
+        log: bool = True,
+    ):
+        self.store = store
+        self.executor: Executor = get_executor(store)
+        self.max_batch = max_batch
+        self.max_rows = max_rows
+        self.linger_s = linger_ms / 1e3
+        self.log = log
+        self.stats = ServerStats()
+        self._queue: queue.Queue[_Pending] = queue.Queue()
+        self._stop = threading.Event()
+        self._threads: list[threading.Thread] = []
+        self._last_log = 0.0
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, port))
+        self._sock.listen(128)
+        self.host, self.port = self._sock.getsockname()[:2]
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self) -> "KGServer":
+        for target in (self._accept_loop, self._dispatch_loop):
+            t = threading.Thread(target=target, daemon=True)
+            t.start()
+            self._threads.append(t)
+        if self.log:
+            print(
+                f"[serve] listening on {self.host}:{self.port} — "
+                f"{self.store.n_triples} triples, {self.store.n_terms} terms",
+                file=sys.stderr,
+                flush=True,
+            )
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        for t in self._threads:
+            t.join(timeout=2.0)
+
+    def serve_forever(self) -> None:
+        self.start()
+        try:
+            while not self._stop.is_set():
+                time.sleep(0.2)
+        except KeyboardInterrupt:
+            pass
+        finally:
+            self.stop()
+
+    # -- accept / per-connection ---------------------------------------------
+
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _addr = self._sock.accept()
+            except OSError:
+                return  # socket closed
+            t = threading.Thread(
+                target=self._client_loop, args=(conn,), daemon=True
+            )
+            t.start()
+
+    def _client_loop(self, conn: socket.socket) -> None:
+        wlock = threading.Lock()
+
+        def send(obj: dict) -> None:
+            data = (json.dumps(obj) + "\n").encode("utf-8")
+            with wlock:
+                try:
+                    conn.sendall(data)
+                except OSError:
+                    pass
+
+        try:
+            rfile = conn.makefile("r", encoding="utf-8")
+            for line in rfile:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    req = json.loads(line)
+                except json.JSONDecodeError as e:
+                    self.stats.errors += 1
+                    send({"error": f"bad json: {e}"})
+                    continue
+                try:
+                    self._handle(req, send)
+                except Exception as e:  # noqa: BLE001 — never drop the socket
+                    self.stats.errors += 1
+                    rid = req.get("id") if isinstance(req, dict) else None
+                    send({"id": rid, "error": f"{type(e).__name__}: {e}"})
+        finally:
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def _handle(self, req: dict, send) -> None:
+        op = req.get("op")
+        if op == "ping":
+            send({"ok": True, "id": req.get("id")})
+            return
+        if op == "stats":
+            send({"id": req.get("id"), **self.stats.as_dict()})
+            return
+        text = req.get("query")
+        if not isinstance(text, str):
+            self.stats.errors += 1
+            send({"id": req.get("id"), "error": "missing 'query'"})
+            return
+        try:
+            q = algebra.parse_select(text)
+        except ValueError as e:
+            self.stats.errors += 1
+            send({"id": req.get("id"), "error": str(e)})
+            return
+        if op == "explain":
+            plan = self.executor.plan(q)
+            send({"id": req.get("id"), "plan": plan.explain()})
+            return
+        limit = req.get("limit")
+        if limit is not None and (
+            not isinstance(limit, int) or isinstance(limit, bool) or limit < 0
+        ):
+            self.stats.errors += 1
+            send({"id": req.get("id"),
+                  "error": "'limit' must be a non-negative integer"})
+            return
+        self._queue.put(
+            _Pending(
+                query=q,
+                req_id=req.get("id"),
+                limit=limit,
+                reply=send,
+            )
+        )
+
+    # -- the micro-batching dispatcher ----------------------------------------
+
+    def _drain(self) -> list[_Pending]:
+        """Block for the first request, then linger briefly so concurrent
+        clients coalesce into one batch."""
+        try:
+            first = self._queue.get(timeout=0.1)
+        except queue.Empty:
+            return []
+        batch = [first]
+        deadline = time.perf_counter() + self.linger_s
+        while len(batch) < self.max_batch:
+            remaining = deadline - time.perf_counter()
+            if remaining <= 0:
+                break
+            try:
+                batch.append(self._queue.get(timeout=remaining))
+            except queue.Empty:
+                break
+        return batch
+
+    def _dispatch_loop(self) -> None:
+        while not self._stop.is_set():
+            batch = self._drain()
+            if not batch:
+                continue
+            groups: dict[tuple, list[_Pending]] = {}
+            for p in batch:
+                groups.setdefault(p.query.signature(), []).append(p)
+            for group in groups.values():
+                self._run_group(group)
+
+    def _run_group(self, group: list[_Pending]) -> None:
+        t0 = time.perf_counter()
+        try:
+            plan = self.executor.plan(group[0].query)
+            result = self.executor.execute(plan, [p.query for p in group])
+        except Exception as e:  # noqa: BLE001 — a bad query must not kill serving
+            self.stats.errors += len(group)
+            for p in group:
+                p.reply({"id": p.req_id, "error": f"{type(e).__name__}: {e}"})
+            return
+        dt = time.perf_counter() - t0
+        self.stats.queries += len(group)
+        self.stats.batches += 1
+        self.stats.busiest_batch = max(self.stats.busiest_batch, len(group))
+        self.stats.total_exec_s += dt
+        lat_ms = dt * 1e3
+        for i, p in enumerate(group):
+            # decoding runs on the dispatcher thread: cap undeclared row
+            # counts so one huge answer cannot stall every other batch
+            # (n_total still reports the full solution count)
+            limit = p.limit if p.limit is not None else self.max_rows
+            p.reply(
+                {
+                    "id": p.req_id,
+                    "vars": list(result.vars),
+                    "rows": [list(r) for r in result.rows(i, limit=limit)],
+                    "n_total": result.n(i),
+                    "batch_size": len(group),
+                    "latency_ms": round(lat_ms, 3),
+                }
+            )
+        now = time.perf_counter()
+        if self.log and now - self._last_log > 1.0:
+            self._last_log = now
+            print(
+                f"[serve] batch={len(group)} {lat_ms:.1f}ms "
+                f"({len(group) / dt:.0f} q/s in-batch; "
+                f"totals: {self.stats.queries} queries, "
+                f"{self.stats.batches} batches)",
+                file=sys.stderr,
+                flush=True,
+            )

@@ -1,0 +1,523 @@
+"""repro.serve: algebra parsing, planner/executor vs the full-algebra
+oracle (property tests over random graphs), deterministic result ordering,
+capacity feedback, the open_store cache, and the batching socket server."""
+
+import json
+import threading
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # test image without hypothesis: seeded-example fallback
+    from _hypothesis_shim import given, settings, st
+
+from repro.core.executor import create_kg
+from repro.kg import persist, solve, parse_bgp
+from repro.kg.store import TripleStore
+from repro.rml import generator
+from repro.serve import (
+    get_executor,
+    oracle_select,
+    parse_select,
+    solve_select,
+)
+from repro.serve.algebra import SelectQuery
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+SUBS = [f"<http://ex/s{i}>" for i in range(5)]
+PREDS = [f"<http://ex/p{i}>" for i in range(3)]
+LITS = ['"1"', '"2"', '"10"', '"2.5"', '"-3"', '"abc"', '"b c"', '""']
+OBJS = SUBS[:2] + LITS
+
+
+def rand_store(seed: int, n_triples: int) -> TripleStore:
+    rng = np.random.default_rng(seed)
+    triples = {
+        (
+            SUBS[rng.integers(0, len(SUBS))],
+            PREDS[rng.integers(0, len(PREDS))],
+            OBJS[rng.integers(0, len(OBJS))],
+        )
+        for _ in range(n_triples)
+    }
+    return TripleStore.from_ntriples(sorted(triples))
+
+
+def check(store: TripleStore, qtext: str) -> None:
+    q = parse_select(qtext)
+    got = solve_select(store, q).rows(0)
+    want = oracle_select(store, q)
+    assert got == want, f"{qtext}\n got: {got}\nwant: {want}"
+
+
+def _tables(tb):
+    tables = {"csv:child.csv": tb.child}
+    if tb.parent is not None:
+        tables["csv:parent.csv"] = tb.parent
+    return tables
+
+
+# --------------------------------------------------------------------------
+# parser
+# --------------------------------------------------------------------------
+
+
+def test_parse_select_forms():
+    q = parse_select(
+        'SELECT DISTINCT ?a ?b WHERE { ?a <http://p> ?b . '
+        'OPTIONAL { ?b <http://q> ?c } FILTER(?c > 3) } LIMIT 7'
+    )
+    assert q.select == ("?a", "?b") and q.distinct and q.limit == 7
+    assert len(q.patterns) == 1 and len(q.optionals) == 1
+    assert q.out_vars() == ("?a", "?b")
+    # bare BGP shorthand
+    q2 = parse_select('?s <http://p> ?o . ?o <http://q> "v"')
+    assert q2.select is None and len(q2.patterns) == 2
+    assert q2.out_vars() == ("?s", "?o")
+    # SELECT * covers optional-only variables too
+    q3 = parse_select(
+        "SELECT * WHERE { ?a <http://p> ?b OPTIONAL { ?a <http://q> ?c } }"
+    )
+    assert q3.out_vars() == ("?a", "?b", "?c")
+
+
+def test_parse_filter_grammar():
+    q = parse_select(
+        "SELECT * WHERE { ?a <http://p> ?b "
+        'FILTER(!bound(?c) && (?b >= 2 || ?b = "x")) }'
+    )
+    assert len(q.filters) == 1
+    # signature abstracts constants but keeps their kind
+    q2 = parse_select(
+        "SELECT * WHERE { ?a <http://p> ?b "
+        'FILTER(!bound(?c) && (?b >= 9 || ?b = "y")) }'
+    )
+    assert q.signature() == q2.signature()
+    q3 = parse_select(
+        "SELECT * WHERE { ?a <http://p> ?b "
+        "FILTER(!bound(?c) && (?b >= 9 || ?b = <http://x>)) }"
+    )
+    assert q.signature() != q3.signature()
+
+
+def test_parse_errors():
+    for bad in (
+        "SELECT WHERE { ?s <http://p> ?o }",            # no var list
+        "SELECT * WHERE { }",                           # empty group
+        "SELECT * WHERE { ?s <http://p> ?o } LIMIT -1", # bad limit
+        "SELECT * WHERE { OPTIONAL { } ?s <http://p> ?o }",
+        "SELECT * WHERE { ?s <http://p> ?o FILTER(3 < 4) }",  # no variable
+        "SELECT * WHERE { ?s <http://p> ?o FILTER(?s < <http://x>) }",
+        "SELECT * WHERE { ?s <http://p> ?o } trailing",
+    ):
+        with pytest.raises(ValueError):
+            parse_select(bad)
+    # optional groups may not share optional-only variables
+    with pytest.raises(ValueError, match="OPTIONAL groups"):
+        parse_select(
+            "SELECT * WHERE { ?s <http://p> ?o "
+            "OPTIONAL { ?s <http://q> ?x } OPTIONAL { ?s <http://r> ?x } }"
+        )
+
+
+# --------------------------------------------------------------------------
+# hand-built graphs: OPTIONAL / FILTER semantics
+# --------------------------------------------------------------------------
+
+
+def _small_store() -> TripleStore:
+    return TripleStore.from_ntriples(
+        [
+            ("<http://ex/s1>", "<http://ex/p>", '"10"'),
+            ("<http://ex/s2>", "<http://ex/p>", '"3"'),
+            ("<http://ex/s3>", "<http://ex/p>", '"abc"'),
+            ("<http://ex/s1>", "<http://ex/q>", '"hi"'),
+            ("<http://ex/s1>", "<http://ex/r>", "<http://ex/s2>"),
+        ]
+    )
+
+
+def test_optional_backfills_unbound():
+    store = _small_store()
+    q = parse_select(
+        "SELECT * WHERE { ?s <http://ex/p> ?v "
+        "OPTIONAL { ?s <http://ex/q> ?h } }"
+    )
+    rows = solve_select(store, q).rows(0)
+    assert rows == oracle_select(store, q)
+    by_s = {r[0]: r[2] for r in rows}
+    assert by_s["<http://ex/s1>"] == '"hi"'
+    assert by_s["<http://ex/s2>"] is None and by_s["<http://ex/s3>"] is None
+
+
+def test_filter_semantics_numeric_string_bound():
+    store = _small_store()
+    for qtext in (
+        # numeric: "abc" errors out to false; 3 < 10 both pass ">2"? no: 3,10
+        "SELECT * WHERE { ?s <http://ex/p> ?v FILTER(?v > 3) }",
+        "SELECT * WHERE { ?s <http://ex/p> ?v FILTER(?v <= 10) }",
+        "SELECT * WHERE { ?s <http://ex/p> ?v FILTER(?v = 10) }",
+        "SELECT * WHERE { ?s <http://ex/p> ?v FILTER(?v != 3) }",
+        # string order compares raw bodies ("10" < "3" as strings)
+        'SELECT * WHERE { ?s <http://ex/p> ?v FILTER(?v < "3") }',
+        'SELECT * WHERE { ?s <http://ex/p> ?v FILTER(?v >= "abc") }',
+        # term identity, including a constant absent from the store
+        'SELECT * WHERE { ?s <http://ex/p> ?v FILTER(?v = "abc") }',
+        'SELECT * WHERE { ?s <http://ex/p> ?v FILTER(?v != "nope") }',
+        # bound() over an OPTIONAL miss, negation, conjunction
+        "SELECT * WHERE { ?s <http://ex/p> ?v "
+        "OPTIONAL { ?s <http://ex/q> ?h } FILTER(bound(?h)) }",
+        "SELECT * WHERE { ?s <http://ex/p> ?v "
+        "OPTIONAL { ?s <http://ex/q> ?h } FILTER(!bound(?h) && ?v < 5) }",
+        # var-vs-var: numeric pairs compare numerically, mixed are false
+        "SELECT * WHERE { ?a <http://ex/p> ?x . ?b <http://ex/p> ?y "
+        "FILTER(?x < ?y) }",
+        "SELECT * WHERE { ?a <http://ex/p> ?x . ?b <http://ex/p> ?y "
+        "FILTER(?x = ?y) }",
+        # iri equality against a variable bound to an iri
+        "SELECT * WHERE { ?s <http://ex/r> ?t FILTER(?t = <http://ex/s2>) }",
+    ):
+        check(store, qtext)
+
+
+def test_filter_on_never_bound_variable():
+    store = _small_store()
+    check(store, "SELECT * WHERE { ?s <http://ex/p> ?v FILTER(bound(?zz)) }")
+    check(store, "SELECT * WHERE { ?s <http://ex/p> ?v FILTER(!bound(?zz)) }")
+    check(store, "SELECT * WHERE { ?s <http://ex/p> ?v FILTER(?zz > 1) }")
+
+
+def test_projection_keeps_duplicates_and_unknown_vars():
+    store = _small_store()
+    # three subjects share predicate p: projecting ?p keeps multiplicity
+    q = parse_select("SELECT ?p WHERE { ?s ?p ?v }")
+    rows = solve_select(store, q).rows(0)
+    assert rows == oracle_select(store, q)
+    assert len(rows) == store.n_triples  # duplicates preserved
+    # an unknown projected variable is unbound everywhere
+    check(store, "SELECT ?s ?nope WHERE { ?s <http://ex/p> ?v }")
+    # DISTINCT collapses
+    check(store, "SELECT DISTINCT ?p WHERE { ?s ?p ?v }")
+    check(store, "SELECT DISTINCT ?p WHERE { ?s ?p ?v } LIMIT 2")
+
+
+def test_multi_pattern_optional_group():
+    store = _small_store()
+    # two-pattern OPTIONAL group evaluates as a unit: both must match
+    check(
+        store,
+        "SELECT * WHERE { ?s <http://ex/p> ?v OPTIONAL { "
+        "?s <http://ex/q> ?h . ?s <http://ex/r> ?t } }",
+    )
+
+
+def test_from_ntriples_template_chars():
+    store = TripleStore.from_ntriples(
+        [("<http://ex/s>", "<http://ex/p>", '"braces {} inside"')]
+    )
+    assert list(store.iter_ntriples()) == [
+        '<http://ex/s> <http://ex/p> "braces {} inside" .'
+    ]
+    check(store, "?s ?p ?o")
+
+
+# --------------------------------------------------------------------------
+# property tests vs the oracle on random graphs
+# --------------------------------------------------------------------------
+
+TEMPLATES = [
+    lambda p, o, x: "?s ?p ?o",
+    lambda p, o, x: f"?s {p[0]} ?o",
+    lambda p, o, x: f"?s {p[0]} {o[0]}",
+    lambda p, o, x: f"?s {p[0]} ?o . ?o {p[1]} ?r",          # chain
+    lambda p, o, x: f"?s {p[0]} ?o . ?s {p[1]} ?r",          # star
+    lambda p, o, x: "?x ?p ?x",                               # repeated var
+    lambda p, o, x: (
+        f"SELECT ?s WHERE {{ ?s {p[0]} ?o OPTIONAL {{ ?s {p[1]} ?r }} }}"
+    ),
+    lambda p, o, x: (
+        f"SELECT * WHERE {{ ?s {p[0]} ?o OPTIONAL {{ ?s {p[1]} ?r }} "
+        f"FILTER(?o > {x}) }}"
+    ),
+    lambda p, o, x: "SELECT DISTINCT ?o WHERE { ?s ?p ?o } LIMIT 3",
+    lambda p, o, x: (
+        f"SELECT * WHERE {{ ?s {p[0]} ?o . ?s {p[1]} ?r FILTER(?o < ?r) }}"
+    ),
+    lambda p, o, x: (
+        f'SELECT * WHERE {{ ?s {p[0]} ?o '
+        f'FILTER(?o >= "a" || ?o = {o[0]}) }}'
+    ),
+]
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 10**6),
+    n=st.integers(0, 25),
+    t=st.integers(0, len(TEMPLATES) - 1),
+)
+def test_engine_matches_oracle_on_random_graphs(seed, n, t):
+    rng = np.random.default_rng(seed + 1)
+    store = rand_store(seed, n)
+    p = [PREDS[rng.integers(0, len(PREDS))] for _ in range(2)]
+    o = [OBJS[rng.integers(0, len(OBJS))] for _ in range(1)]
+    x = ["-3", "1", "2.5", "100"][rng.integers(0, 4)]
+    check(store, TEMPLATES[t](p, o, x))
+
+
+def test_empty_graph_edge_cases():
+    store = TripleStore.from_ntriples([])
+    assert store.n_triples == 0
+    check(store, "?s ?p ?o")
+    check(
+        store,
+        "SELECT * WHERE { ?s <http://ex/p> ?o "
+        "OPTIONAL { ?s <http://ex/q> ?h } FILTER(?o > 1) }",
+    )
+
+
+def test_all_unbound_scan_matches_oracle():
+    store = rand_store(3, 20)
+    check(store, "?s ?p ?o")
+    check(store, "SELECT DISTINCT ?p WHERE { ?s ?p ?o }")
+
+
+def test_unpacked_search_fallback_matches_oracle(monkeypatch):
+    """Stores whose term ids overflow the packed key fields fall back to
+    the 3-column lexicographic search — force that path and recheck."""
+    monkeypatch.setattr(TripleStore, "device_keys", lambda self, order: None)
+    store = rand_store(9, 22)
+    assert store.device_keys("spo") is None
+    for qtext in (
+        "?s ?p ?o",
+        f"?s {PREDS[0]} ?o . ?s {PREDS[1]} ?r",
+        f"SELECT * WHERE {{ ?s {PREDS[0]} ?o "
+        f"OPTIONAL {{ ?s {PREDS[1]} ?r }} FILTER(?o != \"zz\") }}",
+    ):
+        check(store, qtext)
+
+
+# --------------------------------------------------------------------------
+# deterministic ordering (satellite regression)
+# --------------------------------------------------------------------------
+
+
+def test_results_deterministically_ordered(tmp_path):
+    """Row order is sorted by term id == rendered term, so repeated runs,
+    eager-vs-streamed stores, and .kgz roundtrips return identical rows in
+    identical order."""
+    tb = generator.make_testbed("SOM", 400, 0.5, n_poms=2, seed=11)
+    eager = create_kg(tb.doc, tables=_tables(tb)).to_store()
+    streamed = create_kg(
+        tb.doc, tables=_tables(tb), stream=True, block_rows=64
+    ).to_store()
+    path = str(tmp_path / "kg.kgz")
+    persist.save(eager, path)
+    loaded = persist.load(path)
+    preds = sorted({eager.decode_term(int(t)) for t in np.unique(eager.p)})
+    queries = [
+        "?s ?p ?o",
+        f"?m {preds[0]} ?a . ?m {preds[-1]} ?b",
+        f"SELECT ?a WHERE {{ ?m {preds[0]} ?a OPTIONAL {{ ?m {preds[1]} ?b }} }}",
+    ]
+    for qtext in queries:
+        q = parse_select(qtext)
+        first = solve_select(eager, q).rows(0)
+        assert first == sorted(first), "rows must come back sorted"
+        assert first == solve_select(eager, q).rows(0)  # repeatable
+        assert first == solve_select(streamed, q).rows(0)
+        assert first == solve_select(loaded, q).rows(0)
+    # the kg BGP path inherits the ordering (sorted by term id per column)
+    pats = parse_bgp(queries[1])
+    b = solve(eager, pats)
+    first_var = next(iter(b.cols))
+    col = b.cols[first_var]
+    assert (np.diff(col) >= 0).all()
+
+
+# --------------------------------------------------------------------------
+# executor capacity feedback + batching
+# --------------------------------------------------------------------------
+
+
+def test_capacity_feedback_grows_to_exact_need():
+    """Plan from a selective representative, then execute a batch whose
+    other member needs far more rows: the needed-size feedback must grow
+    the capacities and still return exact answers."""
+    triples = [("<http://ex/a>", "<http://ex/rare>", '"x"')]
+    triples += [
+        (f"<http://ex/s{i}>", "<http://ex/common>", f'"{i}"')
+        for i in range(150)
+    ]
+    store = TripleStore.from_ntriples(triples)
+    qa = parse_select("?s <http://ex/rare> ?o")
+    qb = parse_select("?s <http://ex/common> ?o")
+    assert qa.signature() == qb.signature()
+    ex = get_executor(store)
+    plan = ex.plan(qa)  # est comes from the 1-row representative
+    before = ex.dispatches
+    res = ex.execute(plan, [qa, qb])
+    assert ex.dispatches - before >= 2  # at least one re-dispatch to grow
+    assert res.n(0) == 1 and res.n(1) == 150
+    assert res.rows(1) == oracle_select(store, qb)
+    # capacities are remembered per signature: the rerun is one dispatch
+    before = ex.dispatches
+    res2 = ex.execute(plan, [qa, qb])
+    assert ex.dispatches - before == 1
+    assert res2.rows(1) == res.rows(1)
+
+
+def test_limit_value_is_runtime_data_not_plan_structure():
+    """Different LIMIT values share one signature (one compiled pipeline,
+    one server micro-batch group); the limit applies per query."""
+    store = rand_store(21, 25)
+    q2 = parse_select("SELECT ?o WHERE { ?s ?p ?o } LIMIT 2")
+    q5 = parse_select("SELECT ?o WHERE { ?s ?p ?o } LIMIT 5")
+    q0 = parse_select("SELECT ?o WHERE { ?s ?p ?o } LIMIT 0")
+    assert q2.signature() == q5.signature() == q0.signature()
+    assert q2.signature() != parse_select("SELECT ?o WHERE { ?s ?p ?o }").signature()
+    ex = get_executor(store)
+    res = ex.execute(ex.plan(q2), [q2, q5, q0])
+    assert res.rows(0) == oracle_select(store, q2)
+    assert res.rows(1) == oracle_select(store, q5)
+    assert res.n(2) == 0
+
+
+def test_batched_queries_match_individual():
+    store = rand_store(17, 24)
+    ex = get_executor(store)
+    texts = [f"?s {p} ?o" for p in PREDS for _ in range(3)]
+    queries = [parse_select(t) for t in texts]
+    plan = ex.plan(queries[0])
+    res = ex.execute(plan, queries)
+    for i, q in enumerate(queries):
+        assert res.rows(i) == oracle_select(store, q)
+
+
+# --------------------------------------------------------------------------
+# open_store cache
+# --------------------------------------------------------------------------
+
+
+def test_open_store_caches_until_file_changes(tmp_path):
+    store = rand_store(5, 12)
+    path = str(tmp_path / "kg.kgz")
+    persist.save(store, path)
+    a = persist.open_store(path)
+    assert persist.open_store(path) is a
+    # a rewritten snapshot (different content) must reload
+    persist.save(rand_store(6, 18), path)
+    b = persist.open_store(path)
+    assert b is not a and b.n_triples != a.n_triples
+
+
+# --------------------------------------------------------------------------
+# the batching server
+# --------------------------------------------------------------------------
+
+
+def test_server_end_to_end():
+    from repro.serve.client import connect
+    from repro.serve.server import KGServer
+
+    store = _small_store()
+    srv = KGServer(store, port=0, linger_ms=1.0, log=False).start()
+    try:
+        with connect("127.0.0.1", srv.port, retry_s=5.0) as c:
+            assert c.ping()
+            r = c.query("?s <http://ex/p> ?v")
+            assert r["vars"] == ["?s", "?v"]
+            want = oracle_select(store, parse_select("?s <http://ex/p> ?v"))
+            assert [tuple(x) for x in r["rows"]] == want
+            # per-request decode limit does not change n_total
+            r2 = c.query("?s <http://ex/p> ?v", limit=1)
+            assert len(r2["rows"]) == 1 and r2["n_total"] == len(want)
+            # OPTIONAL misses arrive as nulls on the wire
+            r3 = c.query(
+                "SELECT * WHERE { ?s <http://ex/p> ?v "
+                "OPTIONAL { ?s <http://ex/q> ?h } }"
+            )
+            assert any(row[2] is None for row in r3["rows"])
+            # parse errors come back as error replies, not dead sockets
+            with pytest.raises(RuntimeError, match="server error"):
+                c.query("SELECT WHERE {")
+            assert c.ping()  # connection still alive
+            # ...and so does a malformed 'limit' field
+            with pytest.raises(RuntimeError, match="limit"):
+                c.query("?s <http://ex/p> ?v", limit="abc")
+            assert c.ping()
+            assert "Scan" in c.explain("?s <http://ex/p> ?v")
+
+        # concurrent same-shape clients: all answered correctly, batched
+        results = []
+        lock = threading.Lock()
+
+        def hit():
+            with connect("127.0.0.1", srv.port, retry_s=5.0) as cc:
+                r = cc.query("?s <http://ex/p> ?v")
+                with lock:
+                    results.append(r)
+
+        threads = [threading.Thread(target=hit) for _ in range(12)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert len(results) == 12
+        assert all(
+            [tuple(x) for x in r["rows"]] == want for r in results
+        )
+        with connect("127.0.0.1", srv.port) as c:
+            stats = c.stats()
+            assert stats["queries"] >= 13 and stats["errors"] >= 1
+    finally:
+        srv.stop()
+
+
+def test_server_caps_undeclared_row_decode():
+    """Without a request limit the server decodes at most max_rows rows
+    (protecting the dispatcher thread) while n_total stays exact."""
+    from repro.serve.client import connect
+    from repro.serve.server import KGServer
+
+    store = _small_store()
+    srv = KGServer(store, port=0, max_rows=2, log=False).start()
+    try:
+        with connect("127.0.0.1", srv.port, retry_s=5.0) as c:
+            r = c.query("?s ?p ?o")
+            assert len(r["rows"]) == 2 and r["n_total"] == store.n_triples
+            # an explicit limit overrides the cap
+            r2 = c.query("?s ?p ?o", limit=4)
+            assert len(r2["rows"]) == 4
+    finally:
+        srv.stop()
+
+
+def test_server_wire_protocol_raw_socket():
+    """The protocol is plain NDJSON — speak it without the client class."""
+    import socket as socketlib
+
+    from repro.serve.server import KGServer
+
+    store = _small_store()
+    srv = KGServer(store, port=0, log=False).start()
+    try:
+        with socketlib.create_connection(("127.0.0.1", srv.port), 10) as s:
+            f = s.makefile("r", encoding="utf-8")
+            s.sendall(b"not json\n")
+            assert "error" in json.loads(f.readline())
+            s.sendall(
+                json.dumps({"id": 42, "query": "?s <http://ex/q> ?h"}).encode()
+                + b"\n"
+            )
+            resp = json.loads(f.readline())
+            assert resp["id"] == 42
+            assert resp["rows"] == [["<http://ex/s1>", '"hi"']]
+    finally:
+        srv.stop()
