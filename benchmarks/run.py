@@ -248,8 +248,10 @@ def bench_serve(json_dir: str = ".") -> None:
     """The ``repro.serve`` pipeline benchmark on the same 100K-row testbed
     store as the ``kg`` section (numbers directly comparable): end-to-end
     queries/s through the fused jitted executor for point lookups, a
-    3-pattern star BGP, and an OPTIONAL+FILTER query, each at batch sizes
-    1/64/4096.  Writes ``BENCH_serve.json``."""
+    3-pattern star BGP, an OPTIONAL+FILTER query, a 2-arm UNION, an
+    ORDER BY DESC, and a GROUP BY-COUNT, each at batch sizes 1/64/4096.
+    Writes ``BENCH_serve.json`` (gated in CI by ``benchmarks/compare.py``
+    against the committed baseline — see ``benchmarks/README.md``)."""
     from repro.core.executor import create_kg
     from repro.rml import generator
     from repro.serve.bench import bench_serve as run_serve_bench

@@ -44,3 +44,37 @@ assert m.startswith("<http://repro.org/") and g.startswith('"'), resp
 print(f"serve smoke OK: {resp['n_total']} solutions, "
       f"batch={resp['batch_size']}, {resp['latency_ms']}ms")
 EOF
+
+# algebra breadth over the wire: a 2-arm UNION and a GROUP BY-COUNT must
+# answer consistently with the plain query (full counts, decoded cells)
+GN='<http://repro.org/vocab/gene_name>'
+AN='<http://repro.org/vocab/accession_number>'
+BASE_OUT="$(python -m repro.launch.serve --connect "127.0.0.1:$PORT" \
+    --query "SELECT * WHERE { ?m $GN ?g }" --retry-s 30)"
+UNION_OUT="$(python -m repro.launch.serve --connect "127.0.0.1:$PORT" \
+    --query "SELECT * WHERE { { ?m $GN ?x } UNION { ?m $AN ?x } }" --retry-s 30)"
+AN_OUT="$(python -m repro.launch.serve --connect "127.0.0.1:$PORT" \
+    --query "SELECT * WHERE { ?m $AN ?x }" --retry-s 30)"
+COUNT_OUT="$(python -m repro.launch.serve --connect "127.0.0.1:$PORT" \
+    --query "SELECT ?g (COUNT(?m) AS ?n) WHERE { ?m $GN ?g } GROUP BY ?g ORDER BY DESC(?n)" \
+    --retry-s 30)"
+
+python - "$BASE_OUT" "$UNION_OUT" "$AN_OUT" "$COUNT_OUT" <<'EOF'
+import json, sys
+base, union, accn, count = (json.loads(a) for a in sys.argv[1:5])
+# UNION = bag union of the two single-predicate queries
+assert union["vars"] == ["?m", "?x"], union
+assert union["n_total"] == base["n_total"] + accn["n_total"], (
+    union["n_total"], base["n_total"], accn["n_total"])
+assert all(m.startswith("<") and x.startswith('"') for m, x in union["rows"]), union["rows"][:3]
+# GROUP BY-COUNT: integer cells flagged via agg_vars, counts sum to the
+# plain query's solution count, ORDER BY DESC(?n) sorts them descending
+assert count["vars"] == ["?g", "?n"] and count["agg_vars"] == ["?n"], count
+ns = [n for _, n in count["rows"]]
+assert all(isinstance(n, int) and n >= 1 for n in ns), ns[:5]
+assert ns == sorted(ns, reverse=True), ns[:10]
+assert count["n_total"] == len(count["rows"]), count["n_total"]
+assert sum(ns) == base["n_total"], (sum(ns), base["n_total"])
+print(f"algebra smoke OK: union={union['n_total']} rows, "
+      f"{count['n_total']} gene groups summing to {sum(ns)}")
+EOF

@@ -20,7 +20,6 @@ unchanged on the single-pod ``("data", "model")`` and multi-pod
 
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax

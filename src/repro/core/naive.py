@@ -80,7 +80,6 @@ def nested_loop_join(
     """All-pairs equality join, blocked over the child axis to bound the
     (m × n) comparison matrix.  Output layout matches ``pjtt.ProbeResult`` so
     the two paths are drop-in interchangeable in the executor."""
-    n = parent_keys.shape[0]
     m = child_keys.shape[0]
     pad = (-m) % block
     ck = jnp.pad(child_keys, (0, pad), constant_values=-1)

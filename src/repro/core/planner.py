@@ -22,7 +22,7 @@ from repro.rml.model import (
     RefObjectMap,
     TermMap,
     TriplesMap,
-    parse_source_key,
+    parse_source_key,  # noqa: F401  (re-exported: executor calls planner.parse_source_key)
     source_key,
 )
 

@@ -124,7 +124,6 @@ class NeighborSampler:
         )
         rank = np.empty_like(order)
         rank[order] = np.arange(len(order))
-        local = rank[inverse]
         node_table = uniq[order].astype(np.int32)
 
         src = rank[

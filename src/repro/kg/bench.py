@@ -36,7 +36,20 @@ def bench_single_pattern(
     batch: int = 4096,
     seed: int = 0,
 ) -> dict:
-    """Time the batched single-pattern path; returns a json-ready report."""
+    """Time the batched single-pattern path; returns a json-ready report.
+    An empty store reports a zero-query section instead of erroring, so
+    the ``--bench`` CLI paths need no ad-hoc guards."""
+    if store.n_triples == 0:
+        return {
+            "n_triples": 0,
+            "n_terms": int(store.n_terms),
+            "n_queries": 0,
+            "batch": int(batch),
+            "total_matches": 0,
+            "wall_s": 0.0,
+            "queries_per_s": 0.0,
+            "empty_store": True,
+        }
     workload = make_workload(store, n_queries, seed)
     # warm-up: compile every (mask-group, batch-shape) once
     total = 0

@@ -61,15 +61,16 @@ def main() -> None:
             rows = result.rows(0, limit=args.limit)
             print("\t".join(result.vars))
             for row in rows:
-                print("\t".join("∅" if t is None else t for t in row))
+                # COUNT cells are plain ints, unbound cells are None
+                print("\t".join("∅" if t is None else str(t) for t in row))
             shown = (
                 f" (showing {len(rows)})" if len(rows) < result.n(0) else ""
             )
             print(f"[query] {result.n(0)} solutions{shown}", file=sys.stderr)
 
     if args.bench:
-        if store.n_triples == 0:
-            ap.error(f"{args.kg} holds an empty graph: nothing to benchmark")
+        # an empty graph reports a zero-query section (the guard is unified
+        # inside bench_single_pattern, not ad-hoc per CLI)
         from repro.kg.bench import bench_single_pattern
 
         report = bench_single_pattern(

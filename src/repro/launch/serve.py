@@ -32,6 +32,12 @@ def main() -> None:
     ap.add_argument("--max-rows", type=int, default=1000,
                     help="decoded rows per answer when the request sets no "
                          "limit (n_total always reports the full count)")
+    ap.add_argument("--bench", action="store_true",
+                    help="measure the fused-pipeline query classes over "
+                         "--kg and exit (writes the BENCH_serve.json shape; "
+                         "an empty store reports zero-query sections)")
+    ap.add_argument("--json", default=None,
+                    help="with --bench: also write the report to this path")
     ap.add_argument("--connect", default=None, metavar="HOST:PORT",
                     help="client mode: send --query to a running server")
     ap.add_argument("--query", default=None, help="query text (client mode)")
@@ -60,6 +66,15 @@ def main() -> None:
     store = open_store(args.kg)
     print(f"[serve] {store.n_triples} triples, {store.n_terms} terms "
           f"from {args.kg}", file=sys.stderr)
+    if args.bench:
+        from repro.serve.bench import bench_serve
+
+        report = bench_serve(store)
+        print(json.dumps(report, indent=2, sort_keys=True))
+        if args.json:
+            with open(args.json, "w", encoding="utf-8") as f:
+                json.dump(report, f, indent=2, sort_keys=True)
+        return
     KGServer(
         store,
         host=args.host,

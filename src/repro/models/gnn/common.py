@@ -19,8 +19,7 @@ import jax.numpy as jnp
 
 from jax.sharding import PartitionSpec as P
 
-from repro.models import layers
-from repro.models.sharding import active_axes, constrain
+from repro.models.sharding import active_axes
 
 
 def shard_channels(x: jnp.ndarray):

@@ -88,7 +88,6 @@ def _vocab_parallel_rows(table3, flat_ids, cfg: WideDeepConfig, mesh, dp):
     V = cfg.vocab_per_field
     n_model = mesh.shape["model"]
     v_loc = V // n_model
-    D = table3.shape[-1]
 
     def body(tbl, ids):
         # tbl: (F, V/m, D); ids: (n_local,) global flat ids = f*V + v

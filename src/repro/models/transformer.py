@@ -356,7 +356,6 @@ def cache_specs(cfg: LMConfig, dp=("data",)):
 def decode_step(cfg: LMConfig, params, cache, tokens, position, dp=("data",)):
     """One decode step.  tokens (B, 1); position scalar int32.
     Returns (logits (B, 1, V), cache')."""
-    b = tokens.shape[0]
     x = vocab_parallel.embed(params["embed"]["table"], tokens)
     if cfg.tie_embeddings:
         x = x * jnp.asarray(np.sqrt(cfg.d_model), cfg.dtype)

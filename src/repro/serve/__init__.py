@@ -3,7 +3,8 @@
 The serving half of the KG lifecycle, layered over ``repro.kg`` stores:
 
 * :mod:`repro.serve.algebra` — the query IR (``SelectQuery``: BGP +
-  OPTIONAL + FILTER + projection/DISTINCT/LIMIT) and its parser.
+  UNION + OPTIONAL + FILTER + projection / GROUP BY + COUNT / DISTINCT /
+  ORDER BY / LIMIT) and its parser.
 * :mod:`repro.serve.plan`    — cost-based planner: index-measured scan
   cardinalities, greedy connected join ordering, filter pushdown.
 * :mod:`repro.serve.exec`    — the jitted executor: a whole plan (and a
@@ -20,13 +21,14 @@ The serving half of the KG lifecycle, layered over ``repro.kg`` stores:
 Entry point: ``python -m repro.launch.serve --kg out.kgz``.
 """
 
-from repro.serve.algebra import SelectQuery, parse_select
+from repro.serve.algebra import Count, SelectQuery, parse_select
 from repro.serve.exec import BatchResult, Executor, get_executor, solve_select
 from repro.serve.oracle import oracle_select
 from repro.serve.plan import Plan, plan_query
 
 __all__ = [
     "BatchResult",
+    "Count",
     "Executor",
     "Plan",
     "SelectQuery",

@@ -1,12 +1,35 @@
 """SPARQL-lite query algebra — the IR between the wire and the planner.
 
-A query is a :class:`SelectQuery`: a required basic graph pattern, zero or
-more ``OPTIONAL`` groups (each itself a BGP), zero or more ``FILTER``
-expressions, a projection (``SELECT ?a ?b`` / ``SELECT *``), and optional
-``DISTINCT`` / ``LIMIT n`` modifiers.  The planner (``repro.serve.plan``)
+A query is a :class:`SelectQuery`: a required basic graph pattern, an
+optional multi-arm ``UNION`` block (each arm itself a BGP), zero or more
+``OPTIONAL`` groups (each itself a BGP), zero or more ``FILTER``
+expressions, a projection (``SELECT ?a ?b`` / ``SELECT *`` / aggregate
+``(COUNT(?v) AS ?n)``), and optional ``DISTINCT`` / ``GROUP BY`` /
+``ORDER BY`` / ``LIMIT n`` modifiers.  The planner (``repro.serve.plan``)
 turns it into an operator tree — ``Scan`` / ``Join`` / ``LeftJoin`` /
-``Filter`` / ``Project`` / ``Distinct`` / ``Limit`` — and the executor
-(``repro.serve.exec``) lowers that tree to one fused jitted dispatch.
+``Union`` / ``Filter`` / ``Project`` / ``Group`` / ``Distinct`` /
+``OrderBy`` / ``Limit`` — and the executor (``repro.serve.exec``) lowers
+that tree to one fused jitted dispatch.
+
+Semantics of the new operators over our untyped plain literals:
+
+* ``{ A } UNION { B } [UNION { C } ...]`` — bag union of the arms' solution
+  mappings, joined with the required BGP; a variable an arm does not bind
+  is unbound in that arm's rows.  Variables bound in *some but not all*
+  arms may not be re-used by OPTIONAL groups (plan-time error — joining on
+  a maybe-unbound column needs SPARQL's full compatibility semantics).
+* ``ORDER BY ?a DESC(?b)`` — *value-typed* ordering, not term-id order:
+  unbound < IRIs (by rendered term) < numeric literals (by numeric value)
+  < other literals (by raw body), ties broken by rendered term; ``DESC``
+  reverses the whole key (so unbound sorts last).  Keys must be projected
+  variables; remaining columns tie-break in term-id order, so results stay
+  deterministic.
+* ``GROUP BY ?g`` + ``(COUNT(?v) AS ?n)`` / ``(COUNT(*) AS ?n)`` — one row
+  per distinct group-key tuple; ``COUNT(?v)`` counts rows where ``?v`` is
+  bound, ``COUNT(*)`` counts all rows.  Every selected non-aggregate
+  variable must be a group key.  An aggregate without ``GROUP BY`` is one
+  global group (one row even over zero solutions).  Count values travel as
+  plain integers, not terms — see ``BatchResult.agg_vars``.
 
 Filter expressions cover the serving-relevant SPARQL core: comparisons
 (``<  <=  >  >=  =  !=``) between variables and constants, ``bound(?x)``,
@@ -20,8 +43,9 @@ Filter expressions cover the serving-relevant SPARQL core: comparisons
 * an ``<iri>`` operand compares by term identity (``=``/``!=`` only);
 * variable-vs-variable ordering compares numerically when both terms are
   numeric, by literal body when both are literals, else false;
-* any comparison over an unbound variable (a ``LeftJoin`` miss) is false —
-  only ``bound()`` / ``!bound()`` observe unboundness.
+* any comparison over an unbound variable (a ``LeftJoin`` miss or a
+  partial UNION arm) is false — only ``bound()`` / ``!bound()`` observe
+  unboundness.
 
 Everything here is host-side structure; no jax.  The structural
 *signature* of a query (constants abstracted away) is what the server
@@ -153,6 +177,14 @@ def _expr_signature(e: Expr):
 
 
 @dataclasses.dataclass(frozen=True)
+class Count:
+    """``COUNT(?v)`` / ``COUNT(*)`` with its ``AS ?alias`` output name."""
+
+    var: str | None  # None = COUNT(*)
+    alias: str
+
+
+@dataclasses.dataclass(frozen=True)
 class SelectQuery:
     patterns: tuple[TriplePattern, ...]                   # required BGP
     optionals: tuple[tuple[TriplePattern, ...], ...] = ()
@@ -160,28 +192,57 @@ class SelectQuery:
     select: tuple[str, ...] | None = None                 # None = SELECT *
     distinct: bool = False
     limit: int | None = None
+    unions: tuple[tuple[TriplePattern, ...], ...] = ()    # UNION arms (0 or >= 2)
+    group_by: tuple[str, ...] = ()
+    agg: Count | None = None                              # one COUNT, or None
+    order_by: tuple[tuple[str, bool], ...] = ()           # (var, ascending)
 
     def scope(self) -> tuple[str, ...]:
-        """All in-scope variables, required BGP first, then optionals, in
-        first-appearance order."""
+        """All in-scope variables — required BGP first, then UNION arms,
+        then optionals, in first-appearance order."""
         out: dict[str, None] = {}
         for pat in self.patterns:
             for v in pat.variables:
                 out.setdefault(v)
+        for arm in self.unions:
+            for pat in arm:
+                for v in pat.variables:
+                    out.setdefault(v)
         for group in self.optionals:
             for pat in group:
                 for v in pat.variables:
                     out.setdefault(v)
         return tuple(out)
 
+    def union_always_vars(self) -> frozenset[str]:
+        """Variables bound by *every* UNION arm — always bound in the
+        union block's rows, so downstream joins may key on them."""
+        if not self.unions:
+            return frozenset()
+        sets = [
+            {v for pat in arm for v in pat.variables} for arm in self.unions
+        ]
+        return frozenset(set.intersection(*sets))
+
+    def union_partial_vars(self) -> frozenset[str]:
+        """Variables bound in some but not all UNION arms — maybe-unbound
+        after the union, like OPTIONAL-only variables."""
+        if not self.unions:
+            return frozenset()
+        all_vars = {v for arm in self.unions for pat in arm for v in pat.variables}
+        return frozenset(all_vars - self.union_always_vars())
+
     def out_vars(self) -> tuple[str, ...]:
-        """The projected variable list (``SELECT *`` = full scope)."""
+        """The projected variable list (``SELECT *`` = full scope); for
+        aggregate queries the COUNT alias appears at its SELECT position."""
         return self.scope() if self.select is None else self.select
 
     def all_patterns(self) -> tuple[TriplePattern, ...]:
-        """Required + optional patterns flattened, in source order — the
-        index space ``plan.Scan.pattern_pos`` refers to."""
+        """Required + union-arm + optional patterns flattened, in source
+        order — the index space ``plan.Scan.pattern_pos`` refers to."""
         flat = list(self.patterns)
+        for arm in self.unions:
+            flat.extend(arm)
         for group in self.optionals:
             flat.extend(group)
         return tuple(flat)
@@ -196,10 +257,14 @@ class SelectQuery:
 
         return (
             tuple(patsig(p) for p in self.patterns),
+            tuple(tuple(patsig(p) for p in a) for a in self.unions),
             tuple(tuple(patsig(p) for p in g) for g in self.optionals),
             tuple(_expr_signature(f) for f in self.filters),
             self.select,
             self.distinct,
+            self.group_by,
+            (self.agg.var, self.agg.alias) if self.agg else None,
+            self.order_by,
             # only limit *presence* is structural: the value rides along as
             # a per-query runtime operand, so LIMIT 5 and LIMIT 50 share a
             # plan, a compiled pipeline, and a server micro-batch
@@ -222,9 +287,6 @@ _TOKEN = re.compile(
     )""",
     re.VERBOSE,
 )
-
-_KEYWORDS = {"select", "distinct", "where", "optional", "filter", "limit", "bound"}
-
 
 class _Tokens:
     def __init__(self, text: str):
@@ -264,6 +326,12 @@ class _Tokens:
             raise ValueError(f"expected {value or kind}, got {v!r}")
         return v
 
+    def expect_var(self, what: str) -> str:
+        k, v = self.next()
+        if k != "var":
+            raise ValueError(f"{what} takes a variable, got {v!r}")
+        return v
+
 
 def _parse_operand(tk: _Tokens) -> Operand:
     kind, v = tk.next()
@@ -291,9 +359,7 @@ def _parse_unary(tk: _Tokens) -> Expr:
     if t and t[0] == "word" and t[1].lower() == "bound":
         tk.next()
         tk.expect("op", "(")
-        kind, v = tk.next()
-        if kind != "var":
-            raise ValueError(f"bound() takes a variable, got {v!r}")
+        v = tk.expect_var("bound()")
         tk.expect("op", ")")
         return Bound(Var(v))
     lhs = _parse_operand(tk)
@@ -343,37 +409,93 @@ def _parse_triple(tk: _Tokens) -> TriplePattern:
     return TriplePattern(*slots)
 
 
+def _parse_braced_bgp(tk: _Tokens, what: str) -> tuple[TriplePattern, ...]:
+    """``{ triple* }`` — a UNION arm (already past the opening brace when
+    called for the first arm; this helper expects the brace)."""
+    tk.expect("op", "{")
+    pats: list[TriplePattern] = []
+    while (u := tk.peek()) and u[1] != "}":
+        pats.append(_parse_triple(tk))
+    tk.expect("op", "}")
+    if not pats:
+        raise ValueError(f"empty {what}")
+    return tuple(pats)
+
+
 def _parse_group(tk: _Tokens):
     patterns: list[TriplePattern] = []
+    unions: tuple[tuple[TriplePattern, ...], ...] = ()
     optionals: list[tuple[TriplePattern, ...]] = []
     filters: list[Expr] = []
     while (t := tk.peek()) and t[1] != "}":
         if t[0] == "word" and t[1].lower() == "optional":
             tk.next()
-            tk.expect("op", "{")
-            group: list[TriplePattern] = []
-            while (u := tk.peek()) and u[1] != "}":
-                group.append(_parse_triple(tk))
-            tk.expect("op", "}")
-            if not group:
-                raise ValueError("empty OPTIONAL group")
-            optionals.append(tuple(group))
+            optionals.append(_parse_braced_bgp(tk, "OPTIONAL group"))
         elif t[0] == "word" and t[1].lower() == "filter":
             tk.next()
             tk.expect("op", "(")
             filters.append(_parse_expr(tk))
             tk.expect("op", ")")
+        elif t[1] == "{":
+            arms = [_parse_braced_bgp(tk, "UNION arm")]
+            while tk.take_word("union"):
+                arms.append(_parse_braced_bgp(tk, "UNION arm"))
+            if len(arms) < 2:
+                raise ValueError(
+                    "a braced group must be a UNION of two or more arms"
+                )
+            if unions:
+                raise ValueError("at most one UNION block per query")
+            unions = tuple(arms)
         else:
             patterns.append(_parse_triple(tk))
-    return tuple(patterns), tuple(optionals), tuple(filters)
+    return tuple(patterns), unions, tuple(optionals), tuple(filters)
+
+
+def _parse_select_clause(tk: _Tokens):
+    """The projection: ``*``, or a mix of variables and one
+    ``(COUNT(?v|*) AS ?alias)`` aggregate."""
+    if (t := tk.peek()) and t[1] == "*":
+        tk.next()
+        return None, None
+    names: list[str] = []
+    agg: Count | None = None
+    while (t := tk.peek()):
+        if t[0] == "var":
+            names.append(tk.next()[1])
+        elif t[1] == "(":
+            tk.next()
+            if not tk.take_word("count"):
+                raise ValueError("only (COUNT(...) AS ?x) aggregates are supported")
+            tk.expect("op", "(")
+            if (u := tk.peek()) and u[1] == "*":
+                tk.next()
+                cvar = None
+            else:
+                cvar = tk.expect_var("COUNT()")
+            tk.expect("op", ")")
+            if not tk.take_word("as"):
+                raise ValueError("COUNT(...) needs AS ?alias")
+            alias = tk.expect_var("AS")
+            tk.expect("op", ")")
+            if agg is not None:
+                raise ValueError("at most one COUNT aggregate per query")
+            agg = Count(var=cvar, alias=alias)
+            names.append(alias)
+        else:
+            break
+    if not names:
+        raise ValueError("SELECT needs a variable list or *")
+    return tuple(dict.fromkeys(names)), agg
 
 
 def parse_select(text: str) -> SelectQuery:
     """Parse a SPARQL-lite query.  Two accepted forms:
 
-    * ``SELECT [DISTINCT] ?a ?b|* WHERE { ... } [LIMIT n]`` where the group
-      holds triple patterns, ``OPTIONAL { ... }`` blocks and ``FILTER (...)``
-      expressions;
+    * ``SELECT [DISTINCT] ?a ?b|(COUNT(?v|*) AS ?n)|* WHERE { ... }
+      [GROUP BY ?g ...] [ORDER BY ?a|ASC(?a)|DESC(?a) ...] [LIMIT n]``
+      where the group holds triple patterns, one ``{ ... } UNION { ... }``
+      block, ``OPTIONAL { ... }`` blocks and ``FILTER (...)`` expressions;
     * a bare BGP (``'?s <p> ?o . ?o <q> "v"'``) — shorthand for
       ``SELECT * WHERE { ... }``.
     """
@@ -383,22 +505,39 @@ def parse_select(text: str) -> SelectQuery:
     tk = _Tokens(text)
     tk.take_word("select")
     distinct = tk.take_word("distinct")
-    select: tuple[str, ...] | None
-    if (t := tk.peek()) and t[1] == "*":
-        tk.next()
-        select = None
-    else:
+    select, agg = _parse_select_clause(tk)
+    if not tk.take_word("where"):
+        raise ValueError("expected WHERE")
+    tk.expect("op", "{")
+    patterns, unions, optionals, filters = _parse_group(tk)
+    tk.expect("op", "}")
+    group_by: tuple[str, ...] = ()
+    if tk.take_word("group"):
+        if not tk.take_word("by"):
+            raise ValueError("expected BY after GROUP")
         names: list[str] = []
         while (t := tk.peek()) and t[0] == "var":
             names.append(tk.next()[1])
         if not names:
-            raise ValueError("SELECT needs a variable list or *")
-        select = tuple(dict.fromkeys(names))
-    if not tk.take_word("where"):
-        raise ValueError("expected WHERE")
-    tk.expect("op", "{")
-    patterns, optionals, filters = _parse_group(tk)
-    tk.expect("op", "}")
+            raise ValueError("GROUP BY needs at least one variable")
+        group_by = tuple(dict.fromkeys(names))
+    order_by: list[tuple[str, bool]] = []
+    if tk.take_word("order"):
+        if not tk.take_word("by"):
+            raise ValueError("expected BY after ORDER")
+        while (t := tk.peek()):
+            if t[0] == "var":
+                order_by.append((tk.next()[1], True))
+            elif t[0] == "word" and t[1].lower() in ("asc", "desc"):
+                asc = tk.next()[1].lower() == "asc"
+                tk.expect("op", "(")
+                v = tk.expect_var("ASC()/DESC()")
+                tk.expect("op", ")")
+                order_by.append((v, asc))
+            else:
+                break
+        if not order_by:
+            raise ValueError("ORDER BY needs at least one key")
     limit = None
     if tk.take_word("limit"):
         kind, v = tk.next()
@@ -407,8 +546,10 @@ def parse_select(text: str) -> SelectQuery:
         limit = int(v)
     if tk.peek() is not None:
         raise ValueError(f"trailing tokens after query: {tk.peek()[1]!r}")
-    if not patterns:
-        raise ValueError("the required group needs at least one triple pattern")
+    if not patterns and not unions:
+        raise ValueError(
+            "the required group needs at least one triple pattern or a UNION"
+        )
     q = SelectQuery(
         patterns=patterns,
         optionals=optionals,
@@ -416,26 +557,60 @@ def parse_select(text: str) -> SelectQuery:
         select=select,
         distinct=distinct,
         limit=limit,
+        unions=unions,
+        group_by=group_by,
+        agg=agg,
+        order_by=tuple(order_by),
     )
     _validate(q)
     return q
 
 
 def _validate(q: SelectQuery) -> None:
-    """Reject optional groups that share variables bound only in *other*
-    optional groups: joining on a maybe-unbound column needs SPARQL's full
-    compatibility semantics, which the fused pipeline deliberately does not
-    implement (plan-time error beats silently wrong answers)."""
+    """Plan-time rejections (an error here beats silently wrong answers):
+
+    * optional groups may not join on variables that are maybe-unbound —
+      bound only in *other* optional groups, or in some-but-not-all UNION
+      arms — because that needs SPARQL's full compatibility semantics,
+      which the fused pipeline deliberately does not implement;
+    * aggregate queries must project only group keys and the COUNT alias;
+    * ORDER BY keys must be projected variables.
+    """
     required = set()
     for pat in q.patterns:
         required.update(pat.variables)
+    always_bound = required | set(q.union_always_vars())
+    partial_union = set(q.union_partial_vars())
     seen_optional: set[str] = set()
     for group in q.optionals:
         gvars = {v for pat in group for v in pat.variables}
-        clash = (gvars & seen_optional) - required
+        clash = (gvars & (seen_optional | partial_union)) - always_bound
         if clash:
             raise ValueError(
                 "OPTIONAL groups may not share variables that are unbound in "
                 f"the required pattern: {sorted(clash)}"
             )
-        seen_optional |= gvars - required
+        seen_optional |= gvars - always_bound
+    scope = set(q.scope())
+    if q.agg is not None or q.group_by:
+        if q.select is None:
+            raise ValueError("GROUP BY / aggregates need an explicit SELECT list")
+        if q.distinct:
+            raise ValueError("DISTINCT cannot be combined with GROUP BY / COUNT")
+        alias = q.agg.alias if q.agg else None
+        if alias is not None and alias in scope:
+            raise ValueError(
+                f"COUNT alias {alias} collides with an in-scope variable"
+            )
+        if alias is not None and alias in q.group_by:
+            raise ValueError(f"COUNT alias {alias} cannot be a GROUP BY key")
+        for v in q.select:
+            if v != alias and v not in q.group_by:
+                raise ValueError(
+                    f"selected variable {v} must be a GROUP BY key "
+                    "(or the COUNT alias)"
+                )
+    out = set(q.out_vars())
+    for v, _asc in q.order_by:
+        if v not in out:
+            raise ValueError(f"ORDER BY key {v} is not a projected variable")

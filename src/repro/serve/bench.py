@@ -1,6 +1,6 @@
 """Serving throughput for the fused query pipeline (``BENCH_serve.json``).
 
-Three query classes over the paper's testbed store, each at batch sizes
+Six query classes over the paper's testbed store, each at batch sizes
 1 / 64 / 4096 through the pre-encoded executor hot path (the same unit of
 work ``repro.kg.bench`` measures for single patterns, so the numbers are
 directly comparable to ``BENCH_kg.json``):
@@ -9,11 +9,21 @@ directly comparable to ``BENCH_kg.json``):
 * ``bgp3``       — a 3-pattern star BGP anchored at a selective constant
   (two sorted-merge joins fused into the dispatch);
 * ``opt_filter`` — 2 required patterns + ``OPTIONAL`` + ``FILTER`` (join,
-  left-join backfill and side-table filtering in one dispatch).
+  left-join backfill and side-table filtering in one dispatch);
+* ``union``      — an anchored pattern joined with a 2-arm ``UNION``
+  (shared required scan, fused concat-with-provenance);
+* ``orderby``    — an anchored 2-pattern BGP under ``ORDER BY DESC``
+  (value-typed rank sort on device);
+* ``groupcount`` — an anchored 3-pattern BGP under ``GROUP BY`` +
+  ``COUNT`` (key sort + segment-sum in the same dispatch).
 
 Every query is derived from an existing triple, so every query has at
 least one answer.  Constants vary per query; the plan (and the compiled
 pipeline) is shared per class — exactly the server's steady state.
+
+An empty store yields the zero-query report (:func:`empty_report`) —
+sections exist, counts are zero — instead of erroring, so ``--bench``
+CLI paths and CI never need ad-hoc guards.
 """
 
 from __future__ import annotations
@@ -28,6 +38,35 @@ from repro.serve import plan as P
 from repro.serve.exec import Executor, get_executor
 
 BATCH_SIZES = (1, 64, 4096)
+
+CLASS_NAMES = ("single", "bgp3", "opt_filter", "union", "orderby", "groupcount")
+
+
+def empty_report(
+    store: TripleStore, batch_sizes: tuple[int, ...] = BATCH_SIZES
+) -> dict:
+    """The zero-query report for an empty store: every class/batch section
+    present with zero counts, so downstream consumers (CI gate, json
+    diffing) see the same shape as a real run."""
+    zero = {
+        "n_queries": 0,
+        "n_batches": 0,
+        "wall_s": 0.0,
+        "queries_per_s": 0.0,
+        "warm_matches": 0,
+    }
+    return {
+        "n_triples": int(store.n_triples),
+        "n_terms": int(store.n_terms),
+        "empty_store": True,
+        "classes": {
+            name: {
+                "query": None,
+                "batches": {str(b): dict(zero) for b in batch_sizes},
+            }
+            for name in CLASS_NAMES
+        },
+    }
 
 
 def _workload_preds(store: TripleStore) -> list[int]:
@@ -58,6 +97,21 @@ def _classes(store: TripleStore):
             "opt_filter",
             f"SELECT * WHERE {{ ?m {t0} {some_o} . ?m {t1} ?b "
             f'OPTIONAL {{ ?m {t2} ?c }} FILTER(?b != "@none@") }}',
+        ),
+        (
+            "union",
+            f"SELECT * WHERE {{ ?m {t0} {some_o} "
+            f"{{ ?m {t1} ?b }} UNION {{ ?m {t2} ?b }} }}",
+        ),
+        (
+            "orderby",
+            f"SELECT ?m ?b WHERE {{ ?m {t0} {some_o} . ?m {t1} ?b }} "
+            "ORDER BY DESC(?b)",
+        ),
+        (
+            "groupcount",
+            f"SELECT ?b (COUNT(?c) AS ?n) WHERE {{ ?m {t0} {some_o} . "
+            f"?m {t1} ?b . ?m {t2} ?c }} GROUP BY ?b",
         ),
     ]
 
@@ -103,7 +157,10 @@ def bench_serve(
     seed: int = 0,
 ) -> dict:
     """Time every query class at every batch size; returns a json-ready
-    report keyed ``{class: {batch: {queries_per_s, ...}}}``."""
+    report keyed ``{class: {batch: {queries_per_s, ...}}}``.  Empty
+    stores report zero-query sections instead of erroring."""
+    if store.n_triples == 0:
+        return empty_report(store, batch_sizes)
     executor = get_executor(store)
     p0, classes = _classes(store)
     report: dict = {

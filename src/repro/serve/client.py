@@ -1,4 +1,10 @@
-"""Minimal client for the :mod:`repro.serve.server` wire protocol."""
+"""Minimal client for the :mod:`repro.serve.server` wire protocol.
+
+Answers are plain dicts off the wire: ``vars`` / ``rows`` / ``n_total``.
+Aggregate (COUNT) columns are listed in the answer's ``agg_vars`` and
+their row cells are JSON numbers; every other cell is a rendered
+N-Triples term, ``None`` when unbound (an OPTIONAL miss or a UNION arm
+that does not bind the variable)."""
 
 from __future__ import annotations
 

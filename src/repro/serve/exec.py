@@ -2,21 +2,29 @@
 
 The old BGP path materialized every binding table on host between joins;
 here the full operator tree — range scans, sorted-merge joins, OPTIONAL
-backfill, filters, distinct/sort/limit — lowers to *one* jitted function.
-Binding tables stay on device as power-of-two padded int32 columns with a
-packed-valid-prefix row count; ``-1`` is the unbound sentinel a ``LeftJoin``
-backfills for optional-only variables.
+backfill, UNION concat, filters, group/count, distinct/sort/order/limit —
+lowers to *one* jitted function.  Binding tables stay on device as
+power-of-two padded int32 columns with a packed-valid-prefix row count;
+``-1`` is the unbound sentinel a ``LeftJoin`` (or a partial ``UNION``
+arm) backfills for maybe-unbound variables.
 
 Shapes must be static under jit, so every operator has a *capacity* (scan
-rows, join fan-out ``M``, join output rows).  Capacities start from the
-planner's estimates and are corrected by a feedback loop: the compiled
-pipeline returns, alongside the results, the *exact* size each point
-needed; if anything was truncated the executor re-runs once with capacities
-bumped to ``next_pow2(needed)`` (growth is monotone, so the loop
-terminates; capacities are remembered per query signature, so a serving
-workload converges to exactly one dispatch per batch).  Power-of-two
-padding everywhere bounds the number of distinct compiled shapes to
-O(log n) per signature.
+rows, join fan-out ``M``, join output rows, union/backfill concat rows).
+Capacities start from the planner's estimates and are corrected by a
+feedback loop: the compiled pipeline returns, alongside the results, the
+*exact* size each point needed; if anything was truncated the executor
+re-runs once with capacities bumped to ``next_pow2(needed)`` (growth is
+monotone, so the loop terminates; capacities are remembered per query
+signature, so a serving workload converges to exactly one dispatch per
+batch).  Power-of-two padding everywhere bounds the number of distinct
+compiled shapes to O(log n) per signature.
+
+The plan is a DAG, not a tree — UNION arms share the required subtree and
+an OPTIONAL bind-join chain shares its tagged left side — so node
+evaluation is memoized per trace: shared work is computed once per
+dispatch.  GROUP BY counts with a device segment-sum over the key-sorted
+table; ORDER BY sorts by the store's value-typed ``order_rank`` side
+table (count columns by their integer value) with a term-id tie-break.
 
 Batching: the single-query pipeline is ``vmap``-ed over the batch axis, so
 *many same-shape queries execute per dispatch* — constants (term ids, rank
@@ -56,31 +64,40 @@ class BatchResult:
     vars: tuple[str, ...]
     cols: dict[str, np.ndarray]   # int32[B, C] each (C >= max count)
     counts: np.ndarray            # int64[B]
+    # aggregate output columns (COUNT aliases): their cells are plain
+    # integers, not term ids — ``rows`` returns them as ints
+    agg_vars: tuple[str, ...] = ()
 
     def n(self, i: int) -> int:
         return int(self.counts[i])
 
     def ids(self, i: int) -> list[tuple[int, ...]]:
-        """Query ``i``'s rows as term-id tuples (-1 = unbound)."""
+        """Query ``i``'s rows as raw int tuples (term ids, -1 = unbound;
+        counts stay counts)."""
         k = self.n(i)
         return [
             tuple(int(self.cols[v][i, r]) for v in self.vars) for r in range(k)
         ]
 
     def rows(self, i: int, limit: int | None = None) -> list[tuple]:
-        """Query ``i``'s rows decoded to rendered terms (None = unbound)."""
+        """Query ``i``'s rows decoded to rendered terms (None = unbound);
+        aggregate columns come back as plain ints."""
         k = self.n(i)
         if limit is not None:
             k = min(k, limit)
-        return [
-            tuple(
-                None
-                if int(self.cols[v][i, r]) < 0
-                else self.store.decode_term(int(self.cols[v][i, r]))
-                for v in self.vars
-            )
-            for r in range(k)
-        ]
+        out = []
+        for r in range(k):
+            row = []
+            for v in self.vars:
+                x = int(self.cols[v][i, r])
+                if v in self.agg_vars:
+                    row.append(x)
+                elif x < 0:
+                    row.append(None)
+                else:
+                    row.append(self.store.decode_term(x))
+            out.append(tuple(row))
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -219,12 +236,14 @@ class _Lowerer:
         key_bits: int,
         packed: bool,
         prim_rounds: dict[int, int] | None = None,
+        order_is_tid: bool = False,
     ):
         self.plan = plan
         self.caps = caps
         self.store_n = store_n
         self.key_bits = key_bits
         self.packed = packed
+        self.order_is_tid = order_is_tid
         self.rounds = max(1, int(store_n).bit_length())
         self.prim_rounds = prim_rounds or {}
         self.scan_index = {s.node_id: i for i, s in enumerate(plan.scans)}
@@ -232,6 +251,9 @@ class _Lowerer:
         # the column sequence each node's rows are known to be sorted by
         # (empty when unknown) — lets the tail skip redundant sorts
         self._sorted: dict[int, tuple[str, ...]] = {}
+        # per-trace node memo: the plan is a DAG (shared union/optional
+        # subtrees) and every shared node must be computed exactly once
+        self._memo: dict[int, tuple] = {}
         # bound during trace
         self.scan_cols: dict[int, tuple] = {}
         self.scan_keys: dict[int, jnp.ndarray | None] = {}
@@ -509,13 +531,85 @@ class _Lowerer:
         self.needed[f"joinC{node.node_id}"] = total
         return cols, n
 
+    # -- union / optional-chain provenance ------------------------------------
+
+    def _union(self, node: P.UnionNode):
+        """Fused concat-with-provenance: every arm's packed rows scatter
+        into one output table at that arm's running offset (arm-major
+        order — a row's provenance is its arm's offset range); variables
+        an arm does not bind stay at the unbound sentinel."""
+        arm_results = [self._eval(a) for a in node.arms]
+        cap = self.caps[f"unionC{node.node_id}"]
+        out = {v: jnp.full(cap, UNBOUND, jnp.int32) for v in node.out_vars}
+        offset = jnp.int32(0)
+        for acols, an in arm_results:
+            acap = len(next(iter(acols.values()))) if acols else 1
+            j = jnp.arange(acap, dtype=jnp.int32)
+            pos = offset + j
+            keep = (j < an) & (pos < cap)
+            idx = jnp.where(keep, pos, cap)
+            for v in node.out_vars:
+                if v in acols:
+                    out[v] = out[v].at[idx].set(acols[v], mode="drop")
+            offset = offset + an.astype(jnp.int32)
+        self.needed[f"unionC{node.node_id}"] = offset
+        self._sorted[node.node_id] = ()
+        return out, jnp.minimum(offset, cap)
+
+    def _tag_rows(self, node: P.TagRows):
+        """Append the packed row index as a synthetic column — the
+        provenance an OPTIONAL bind-join chain joins back on.  Row ids are
+        strictly increasing, so any known sort sequence extends by them."""
+        cols, n = self._eval(node.child)
+        cap = len(next(iter(cols.values()))) if cols else 1
+        out = dict(cols)
+        out[node.var] = jnp.arange(cap, dtype=jnp.int32)
+        self._sorted[node.node_id] = (
+            self._sorted.get(node.child.node_id, ()) + (node.var,)
+        )
+        return out, n
+
+    def _left_finish(self, node: P.LeftFinish):
+        """Finish a multi-pattern OPTIONAL chain: the chain's packed rows
+        are the matches; left rows whose row id never reached the chain
+        output append after them with the group's variables unbound."""
+        lcols, ln = self._eval(node.left)
+        rcols, rn = self._eval(node.right)
+        capL = len(next(iter(lcols.values())))
+        capR = len(next(iter(rcols.values())))
+        cap = self.caps[f"leftC{node.node_id}"]
+        lvalid = jnp.arange(capL) < ln
+        rvalid = jnp.arange(capR) < rn
+        rid = rcols[node.rowid]
+        matched = (
+            jnp.zeros(capL, bool)
+            .at[jnp.where(rvalid, rid, capL)]
+            .set(True, mode="drop")
+        )
+        unmatched = lvalid & ~matched
+        out = {v: jnp.full(cap, UNBOUND, jnp.int32) for v in node.out_vars}
+        jr = jnp.arange(capR, dtype=jnp.int32)
+        idx_r = jnp.where(rvalid & (jr < cap), jr, cap)
+        for v in node.out_vars:
+            if v in rcols:
+                out[v] = out[v].at[idx_r].set(rcols[v], mode="drop")
+        upos_raw = rn + jnp.cumsum(unmatched.astype(jnp.int32)) - 1
+        upos = jnp.where(unmatched & (upos_raw < cap), upos_raw, cap)
+        for v in node.out_vars:
+            if v in lcols:
+                out[v] = out[v].at[upos].set(lcols[v], mode="drop")
+        total = rn + jnp.sum(unmatched.astype(jnp.int32))
+        self.needed[f"leftC{node.node_id}"] = total
+        self._sorted[node.node_id] = ()
+        return out, jnp.minimum(total, cap)
+
     # -- filters -------------------------------------------------------------
 
     def _gather_side(self, array, ids):
         return array[jnp.clip(ids, 0, array.shape[0] - 1)]
 
     def _cmp(self, c: P.LCmp, cols: dict, cap: int):
-        is_lit, is_num, str_rank, num_rank = self.vt_arrays
+        is_lit, is_num, str_rank, num_rank = self.vt_arrays[:4]
 
         def var_ids(o: P.LOperand):
             if o.var in cols:
@@ -627,6 +721,75 @@ class _Lowerer:
             out[v] = cols[v] if v in cols else jnp.full(cap, UNBOUND, jnp.int32)
         return out, n
 
+    def _group(self, node: P.Group):
+        """GROUP BY + COUNT via a device segment-sum: sort by the key
+        columns, find segment boundaries, count each segment's
+        contributions (1 per row for COUNT(*), boundness of the argument
+        for COUNT(?v)), and emit one packed row per segment — output rows
+        are unique in the key tuple, so they come out sorted by it."""
+        cols, n = self._eval(node.child)
+        cap = len(next(iter(cols.values()))) if cols else 1
+        valid = jnp.arange(cap) < n
+        if node.count_var is None:
+            contrib = valid.astype(jnp.int32)
+        else:
+            cv = cols.get(node.count_var)
+            contrib = (
+                jnp.zeros(cap, jnp.int32)
+                if cv is None
+                else (valid & (cv >= 0)).astype(jnp.int32)
+            )
+        if not node.keys:
+            # the global group: exactly one row, even over zero solutions
+            total = jnp.sum(contrib)
+            out = {
+                v: jnp.zeros(1, jnp.int32).at[0].set(total)
+                for v in node.out_vars  # validation: only the alias
+            }
+            self._sorted[node.node_id] = node.out_vars
+            return out, jnp.int32(1)
+        key_cols = {
+            k: cols.get(k, jnp.full(cap, UNBOUND, jnp.int32))
+            for k in node.keys
+        }
+        perm, _ = _sort_perm(key_cols, node.keys, n, cap)
+        skeys = {k: c[perm] for k, c in key_cols.items()}
+        svalid = valid[perm]
+        scontrib = contrib[perm]
+        same_prev = jnp.ones(cap, bool)
+        for k in node.keys:
+            c = skeys[k]
+            same_prev = same_prev & jnp.concatenate(
+                [jnp.zeros(1, bool), c[1:] == c[:-1]]
+            )
+        boundary = svalid & ~same_prev
+        gid_raw = jnp.cumsum(boundary.astype(jnp.int32)) - 1
+        gid = jnp.where(svalid, gid_raw, cap)
+        counts = jnp.zeros(cap, jnp.int32).at[gid].add(scontrib, mode="drop")
+        n_groups = jnp.sum(boundary.astype(jnp.int32))
+        bidx = jnp.where(boundary, gid_raw, cap)
+        out = {}
+        for v in node.out_vars:
+            if v == node.alias:
+                out[v] = counts
+            else:  # a selected group key: its value at each segment head
+                out[v] = (
+                    jnp.full(cap, UNBOUND, jnp.int32)
+                    .at[bidx]
+                    .set(skeys[v], mode="drop")
+                )
+        # output rows are unique in the full key tuple and sorted by it,
+        # so any column extension of the key sequence stays sorted
+        seq: list[str] = []
+        for k in node.keys:
+            if k not in node.out_vars:
+                break
+            seq.append(k)
+        if len(seq) == len(node.keys):
+            seq += [v for v in node.out_vars if v not in seq]
+        self._sorted[node.node_id] = tuple(seq)
+        return out, n_groups
+
     def _distinct(self, node: P.Distinct):
         cols, n = self._eval(node.child)
         self._sorted[node.node_id] = node.out_vars
@@ -659,23 +822,92 @@ class _Lowerer:
         perm, valid = _sort_perm(cols, node.out_vars, n, cap)
         return {v: c[perm] for v, c in cols.items()}, n
 
+    def _order_by(self, node: P.OrderBy):
+        """Value-typed ORDER BY: term columns key on ``order_rank`` (the
+        store-wide value order permutation), count columns on their raw
+        integer value; descending keys negate; every output column
+        tie-breaks in term-id order so the result stays deterministic.
+        Elided when the child's tracked sortedness already realizes the
+        requested order (possible only when value order == term-id
+        order, or when every key is a count column)."""
+        cols, n = self._eval(node.child)
+        self._sorted[node.node_id] = ()
+        if not cols:
+            return cols, n
+        cap = len(next(iter(cols.values())))
+        keyvars = tuple(v for v, _, _ in node.keys)
+        desired = keyvars + tuple(
+            v for v in node.out_vars if v not in keyvars
+        )
+        elidable = all(asc for _, asc, _ in node.keys) and (
+            self.order_is_tid
+            or all(is_count for _, _, is_count in node.keys)
+        )
+        child_sorted = self._sorted.get(node.child.node_id, ())
+        if elidable and child_sorted[: len(desired)] == desired:
+            self._sorted[node.node_id] = child_sorted
+            return cols, n
+        valid = jnp.arange(cap) < n
+        order_rank = self.vt_arrays[4]
+        keys = []
+        for v, asc, is_count in node.keys:
+            c = cols.get(v, jnp.full(cap, UNBOUND, jnp.int32))
+            if is_count:
+                k = c
+            else:
+                # unbound (-1) keys below every rank: unbound-first
+                # ascending, unbound-last descending
+                k = jnp.where(
+                    c >= 0, self._gather_side(order_rank, c), jnp.int32(-1)
+                )
+            if not asc:
+                k = -k
+            keys.append(jnp.where(valid, k, I32_MAX))
+        for v in node.out_vars:  # term-id tie-break: determinism
+            c = cols.get(v, jnp.full(cap, UNBOUND, jnp.int32))
+            keys.append(jnp.where(valid, c, I32_MAX))
+        payload = jnp.arange(cap, dtype=jnp.int32)
+        out = jax.lax.sort(
+            tuple(keys) + (payload,), num_keys=len(keys), is_stable=True
+        )
+        perm = out[-1]
+        return {v: c[perm] for v, c in cols.items()}, n
+
     # -- dispatch ------------------------------------------------------------
 
     def _eval(self, node: P.Node):
+        hit = self._memo.get(node.node_id)
+        if hit is not None:
+            return hit
+        res = self._eval_inner(node)
+        self._memo[node.node_id] = res
+        return res
+
+    def _eval_inner(self, node: P.Node):
         if isinstance(node, P.Scan):
             return self._scan(node)
         if isinstance(node, P.BindJoin):
             return self._bind_join(node)
         if isinstance(node, P.Join):
             return self._join(node)
+        if isinstance(node, P.UnionNode):
+            return self._union(node)
+        if isinstance(node, P.TagRows):
+            return self._tag_rows(node)
+        if isinstance(node, P.LeftFinish):
+            return self._left_finish(node)
         if isinstance(node, P.Filter):
             return self._filter(node)
         if isinstance(node, P.Project):
             return self._project(node)
+        if isinstance(node, P.Group):
+            return self._group(node)
         if isinstance(node, P.Distinct):
             return self._distinct(node)
         if isinstance(node, P.Sort):
             return self._sort(node)
+        if isinstance(node, P.OrderBy):
+            return self._order_by(node)
         if isinstance(node, P.Limit):
             cols, n = self._eval(node.child)
             self._sorted[node.node_id] = self._sorted.get(
@@ -710,6 +942,7 @@ class _Lowerer:
         self.qvalid = qvalid
         self.qlimit = qlimit
         self.needed = {}
+        self._memo = {}
         cols, n = self._eval(self.plan.root)
         out_cols = tuple(cols.get(v) for v in self.plan.root.out_vars)
         return out_cols, n, dict(self.needed)
@@ -722,8 +955,12 @@ class _Lowerer:
 
 def _initial_caps(plan: P.Plan, floors: dict[str, int]) -> dict[str, int]:
     caps: dict[str, int] = {}
+    seen: set[int] = set()
 
     def walk(node: P.Node) -> None:
+        if node.node_id in seen:  # the plan is a DAG: visit shared subtrees once
+            return
+        seen.add(node.node_id)
         if isinstance(node, P.Scan):
             if node.out_vars:
                 caps[f"scan{node.node_id}"] = next_pow2(max(node.est, 1))
@@ -751,6 +988,20 @@ def _initial_caps(plan: P.Plan, floors: dict[str, int]) -> dict[str, int]:
                 caps[f"joinC{node.node_id}"] = next_pow2(
                     min(max(node.est, 16), 1 << 22)
                 )
+            return
+        if isinstance(node, P.UnionNode):
+            for arm in node.arms:
+                walk(arm)
+            caps[f"unionC{node.node_id}"] = next_pow2(
+                min(max(node.est, 16), 1 << 22)
+            )
+            return
+        if isinstance(node, P.LeftFinish):
+            walk(node.left)
+            walk(node.right)
+            caps[f"leftC{node.node_id}"] = next_pow2(
+                min(max(node.est, 16), 1 << 22)
+            )
             return
         for c in P._children(node):
             walk(c)
@@ -798,6 +1049,11 @@ class Executor:
                 if packed
                 else None
             )
+            order_is_tid = (
+                value_table(self.store).order_is_tid
+                if plan.needs_values
+                else False
+            )
             lowerer = _Lowerer(
                 plan,
                 caps,
@@ -805,6 +1061,7 @@ class Executor:
                 self.store.KEY_BITS,
                 packed,
                 prim_rounds,
+                order_is_tid,
             )
 
             def single(
@@ -862,11 +1119,27 @@ class Executor:
         out_vars = plan.root.out_vars
         bsz = consts.shape[0]
         if store.n_triples == 0:
+            if plan.global_agg_alias is not None:
+                # a global COUNT answers one zero row even over nothing
+                lim = (
+                    np.full(bsz, -1, np.int64)
+                    if limits is None
+                    else np.asarray(limits, np.int64)[:bsz]
+                )
+                counts = np.where(lim >= 0, np.minimum(lim, 1), 1)
+                return BatchResult(
+                    store=store,
+                    vars=out_vars,
+                    cols={v: np.zeros((bsz, 1), np.int32) for v in out_vars},
+                    counts=counts.astype(np.int64),
+                    agg_vars=plan.agg_vars,
+                )
             return BatchResult(
                 store=store,
                 vars=out_vars,
                 cols={v: np.full((bsz, 1), -1, np.int32) for v in out_vars},
                 counts=np.zeros(bsz, np.int64),
+                agg_vars=plan.agg_vars,
             )
         bpad = next_pow2(max(bsz, 1))
         if fops is None:
@@ -885,7 +1158,7 @@ class Executor:
             )
         qvalid = np.zeros(bpad, bool)
         qvalid[:bsz] = True
-        vt = value_table(store) if plan.has_filters else None
+        vt = value_table(store) if plan.needs_values else None
 
         scan_cols_flat = tuple(
             c for s in plan.scans for c in store.device_cols(s.order)
@@ -901,11 +1174,14 @@ class Executor:
             z = jnp.zeros(1, jnp.int32)
             scan_keys_flat = ((z, z),) * len(plan.scans)
             scan_prim_flat = (z,) * len(plan.scans)
-        if plan.has_filters:
-            vt_arrays = (vt.is_lit, vt.is_num, vt.str_rank, vt.num_rank)
+        if plan.needs_values:
+            vt_arrays = (
+                vt.is_lit, vt.is_num, vt.str_rank, vt.num_rank, vt.order_rank
+            )
         else:
             z = jnp.zeros(1, bool)
-            vt_arrays = (z, z, jnp.zeros(1, jnp.int32), jnp.zeros(1, jnp.int32))
+            zi = jnp.zeros(1, jnp.int32)
+            vt_arrays = (z, z, zi, zi, zi)
 
         floors = self._floors.setdefault(plan.sig, {})
         caps = _initial_caps(plan, floors)
@@ -940,7 +1216,8 @@ class Executor:
             for v, c in zip(out_vars, out_cols)
         } if out_cols else {}
         return BatchResult(
-            store=store, vars=out_vars, cols=cols, counts=counts
+            store=store, vars=out_vars, cols=cols, counts=counts,
+            agg_vars=plan.agg_vars,
         )
 
     def solve(self, q: A.SelectQuery) -> BatchResult:

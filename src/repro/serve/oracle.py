@@ -1,16 +1,22 @@
 """Naive full-algebra oracle — the tests' ground truth for ``repro.serve``.
 
 Extends the BGP-only set-scan oracle (``repro.kg.query.oracle_solve``) to
-the whole SPARQL-lite algebra: OPTIONAL, FILTER, projection, DISTINCT and
-LIMIT.  Everything is quadratic, string-based Python over the *decoded*
-triple list — it deliberately shares no code with the indexed, jitted
-engine (same philosophy as the kg oracle), except the single
-number-parsing rule (:func:`repro.serve.values.parse_number`), which is a
-semantic definition, not an implementation detail.
+the whole SPARQL-lite algebra: UNION, OPTIONAL, FILTER, projection,
+GROUP BY + COUNT, DISTINCT, ORDER BY and LIMIT.  Everything is quadratic,
+string-based Python over the *decoded* triple list — it deliberately
+shares no code with the indexed, jitted engine (same philosophy as the kg
+oracle), except the single number-parsing rule
+(:func:`repro.serve.values.parse_number`), which is a semantic
+definition, not an implementation detail.
 
 Rows come back deterministically ordered — sorted by rendered term per
-column, unbound (``None``) first — which is exactly the engine's term-id
-order, because term ids are ranks of rendered term strings.
+column, unbound (``None``) first, COUNT columns by integer value — which
+is exactly the engine's term-id order, because term ids are ranks of
+rendered term strings.  ``ORDER BY`` sorts by the value-typed total order
+(unbound < IRIs < numeric literals by value < other literals by body,
+ties by rendered term), descending keys fully reversed, with the default
+deterministic order as the tie-break — mirroring the engine's
+``order_rank`` side table.
 """
 
 from __future__ import annotations
@@ -145,13 +151,51 @@ def _eval_expr(e: A.Expr, env: dict[str, str]) -> bool:
     raise TypeError(e)
 
 
+def _default_cell_key(cell):
+    """The engine's per-column deterministic order: unbound first, then
+    rendered-term (= term id) order; COUNT cells are plain ints and order
+    by value.  Columns are homogeneous, so the mixed tuple never compares
+    int against str within one column."""
+    if cell is None:
+        return (0, 0.0, "")
+    if isinstance(cell, int):
+        return (1, float(cell), "")
+    return (1, 0.0, cell)
+
+
+def _orderby_cell_key(cell):
+    """The value-typed ORDER BY total order (``values.order_rank``):
+    unbound < IRIs (rendered) < numeric literals (value, rendered tie) <
+    other literals (body, rendered tie); COUNT cells by integer value."""
+    if cell is None:
+        return (-1, 0.0, ())
+    if isinstance(cell, int):
+        return (0, float(cell), ())
+    if not _is_literal(cell):
+        return (0, 0.0, (cell,))
+    v = _numeric(cell)
+    if v is not None:
+        return (1, v, (cell,))
+    return (2, 0.0, (_body(cell), cell))
+
+
 def oracle_select(store: TripleStore, q: A.SelectQuery) -> list[tuple]:
     """Evaluate ``q`` naively; rows are tuples of rendered terms (``None``
-    for unbound) over ``q.out_vars()``, deterministically sorted, with
-    DISTINCT and LIMIT applied — directly comparable to
-    ``BatchResult.rows(i)``."""
+    for unbound, plain ints for COUNT columns) over ``q.out_vars()``,
+    deterministically sorted, with GROUP BY / DISTINCT / ORDER BY / LIMIT
+    applied — directly comparable to ``BatchResult.rows(i)``."""
     triples = _decoded_triples(store)
-    sols = _match_bgp(triples, q.patterns)
+    sols = _match_bgp(triples, q.patterns) if q.patterns else [{}]
+    if q.unions:
+        arm_sols: list[dict[str, str]] = []
+        for arm in q.unions:
+            arm_sols.extend(_match_bgp(triples, arm))
+        sols = [
+            {**env, **row}
+            for env in sols
+            for row in arm_sols
+            if all(env.get(v, row[v]) == row[v] for v in row)
+        ]
     for group in q.optionals:
         gsols = _match_bgp(triples, group)
         joined: list[dict[str, str]] = []
@@ -170,10 +214,41 @@ def oracle_select(store: TripleStore, q: A.SelectQuery) -> list[tuple]:
         env for env in sols if all(_eval_expr(f, env) for f in q.filters)
     ]
     out_vars = q.out_vars()
-    rows = [tuple(env.get(v) for v in out_vars) for env in sols]
-    if q.distinct:
-        rows = list(dict.fromkeys(rows))
-    rows.sort(key=lambda r: tuple("" if t is None else t for t in r))
+    if q.agg is not None or q.group_by:
+        groups: dict[tuple, list[dict[str, str]]] = {}
+        for env in sols:
+            key = tuple(env.get(k) for k in q.group_by)
+            groups.setdefault(key, []).append(env)
+        if not q.group_by and not groups:
+            groups[()] = []  # the global group: one row over zero solutions
+        alias = q.agg.alias if q.agg else None
+        cvar = q.agg.var if q.agg else None
+        rows = []
+        for key, members in groups.items():
+            by_key = dict(zip(q.group_by, key))
+            row = []
+            for v in out_vars:
+                if v == alias:
+                    row.append(
+                        len(members)
+                        if cvar is None
+                        else sum(1 for m in members if m.get(cvar) is not None)
+                    )
+                else:
+                    row.append(by_key.get(v))
+            rows.append(tuple(row))
+    else:
+        rows = [tuple(env.get(v) for v in out_vars) for env in sols]
+        if q.distinct:
+            rows = list(dict.fromkeys(rows))
+    # the default deterministic order doubles as the ORDER BY tie-break
+    rows.sort(key=lambda r: tuple(_default_cell_key(c) for c in r))
+    if q.order_by:
+        # stable sorts applied last key first realize the multi-direction
+        # lexicographic order (exactly the engine's variadic key sort)
+        for var, asc in reversed(q.order_by):
+            i = out_vars.index(var)
+            rows.sort(key=lambda r: _orderby_cell_key(r[i]), reverse=not asc)
     if q.limit is not None:
         rows = rows[: q.limit]
     return rows

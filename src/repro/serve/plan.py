@@ -11,14 +11,29 @@ disconnected scan cross-joins only when no connected one remains.
 Placement rules:
 
 * filters are pushed to the earliest point where every eventually-bound
-  variable they mention is in scope (a filter over optional-only variables
-  waits until after that ``LeftJoin``);
-* ``OPTIONAL`` groups are planned as their own sub-pipelines (same greedy
-  fold) and attached with ``LeftJoin`` after the required part;
-* the tail is ``Project -> Distinct | Sort -> Limit`` — the engine always
-  sorts final binding tables by term id, so results are deterministically
-  ordered (and, because term ids are ranks of rendered terms, identical
-  across eager / streamed / ``.kgz``-roundtripped stores).
+  variable they mention is in scope (a filter over union- or optional-only
+  variables waits until after that ``Union`` / ``LeftJoin``);
+* ``UNION`` arms each fold *onto the shared required subtree* — the
+  required scans are planned once and the executor evaluates them once
+  (its node memo turns the plan tree into a DAG), so arms never re-scan
+  the shared part; arm costs sum into the ``Union`` concat capacity;
+* single-pattern ``OPTIONAL`` groups bind-join with unmatched-row
+  backfill; multi-pattern groups are planned as *bind-join chains off the
+  required scope*: the left rows are tagged with a synthetic row id, the
+  group's patterns chain as inner (bind) joins anchored on the left
+  bindings — the group is never materialized on its own — and a final
+  ``LeftFinish`` appends the unmatched left rows with the group's
+  variables unbound;
+* aggregation (``GROUP BY`` + ``COUNT``) places after all joins and
+  filters: ``Group`` sorts by the key columns and segment-counts on
+  device, replacing the ``Project`` tail;
+* the tail is ``Project|Group -> Distinct | Sort | OrderBy -> Limit`` —
+  ``ORDER BY`` sorts by *value-typed* rank keys (``serve/values.py``) with
+  a full term-id tie-break, so results stay deterministic; without it the
+  engine sorts final binding tables by term id (and, because term ids are
+  ranks of rendered terms, identically across eager / streamed /
+  ``.kgz``-roundtripped stores).  The executor elides either sort when
+  the pipeline's tracked sortedness already matches.
 
 The plan is structure-only: constants live in per-query operand vectors
 (:func:`encode_scan_consts` / :func:`encode_filter_ops`), so one plan (and
@@ -30,7 +45,7 @@ micro-batches on.
 from __future__ import annotations
 
 import dataclasses
-from typing import Union
+from typing import Union as TUnion
 
 import numpy as np
 
@@ -82,7 +97,7 @@ class LOr:
     rhs: "LExpr"
 
 
-LExpr = Union[LCmp, LBound, LNot, LAnd, LOr]
+LExpr = TUnion[LCmp, LBound, LNot, LAnd, LOr]
 
 _FLIP = {"<": ">", ">": "<", "<=": ">=", ">=": "<=", "=": "=", "!=": "!="}
 
@@ -226,6 +241,46 @@ class BindJoin:
 
 
 @dataclasses.dataclass(frozen=True)
+class UnionNode:
+    """Bag union of the arms' solution tables: a fused concat preserving
+    arm order (a row's provenance is its arm's offset range).  Arms share
+    the required subtree — the executor's node memo evaluates it once."""
+
+    node_id: int
+    arms: tuple["Node", ...]
+    out_vars: tuple[str, ...]
+    est: int
+
+
+@dataclasses.dataclass(frozen=True)
+class TagRows:
+    """Append a synthetic row-id column (the packed row index) — the
+    provenance a multi-pattern OPTIONAL chain joins back on."""
+
+    node_id: int
+    child: "Node"
+    var: str                                 # synthetic, never a query var
+    out_vars: tuple[str, ...]
+    est: int
+
+
+@dataclasses.dataclass(frozen=True)
+class LeftFinish:
+    """Finish a multi-pattern OPTIONAL planned as a bind-join chain:
+    ``right`` is the inner chain ``TagRows(left) |x| p1 |x| p2 ...`` — its
+    rows are the matches, carrying every left column — and left rows whose
+    row id never reached the chain output are appended with the group's
+    variables left unbound."""
+
+    node_id: int
+    left: "Node"                             # the TagRows node
+    right: "Node"                            # the inner chain
+    rowid: str
+    out_vars: tuple[str, ...]
+    est: int
+
+
+@dataclasses.dataclass(frozen=True)
 class Filter:
     node_id: int
     child: "Node"
@@ -239,6 +294,20 @@ class Project:
     node_id: int
     child: "Node"
     out_vars: tuple[str, ...]
+    est: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Group:
+    """GROUP BY + COUNT: sort by the key columns, segment-count on device.
+    ``keys == ()`` is the global group (always exactly one output row)."""
+
+    node_id: int
+    child: "Node"
+    keys: tuple[str, ...]
+    count_var: str | None                    # COUNT(?v) argument; None = *
+    alias: str | None                        # None = no COUNT selected
+    out_vars: tuple[str, ...]                # the SELECT order
     est: int
 
 
@@ -259,6 +328,20 @@ class Sort:
 
 
 @dataclasses.dataclass(frozen=True)
+class OrderBy:
+    """Value-typed ORDER BY: each key column sorts by the store's
+    ``order_rank`` side table (count columns by their integer value),
+    descending keys negated; the remaining output columns tie-break in
+    term-id order so the result is still deterministic."""
+
+    node_id: int
+    child: "Node"
+    keys: tuple[tuple[str, bool, bool], ...]  # (var, ascending, is_count)
+    out_vars: tuple[str, ...]
+    est: int
+
+
+@dataclasses.dataclass(frozen=True)
 class Limit:
     node_id: int
     child: "Node"
@@ -267,7 +350,10 @@ class Limit:
     est: int
 
 
-Node = Union[Scan, BindJoin, Join, Filter, Project, Distinct, Sort, Limit]
+Node = TUnion[
+    Scan, BindJoin, Join, UnionNode, TagRows, LeftFinish, Filter,
+    Project, Group, Distinct, Sort, OrderBy, Limit,
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -276,16 +362,35 @@ class Plan:
     root: Node
     # pattern readers (Scan | BindJoin) in pipeline order; reader i takes
     # constants row i of the per-query consts matrix
-    scans: tuple[Union[Scan, BindJoin], ...]
+    scans: tuple[TUnion[Scan, BindJoin], ...]
     n_filter_ops: int
     has_filters: bool
+    # the value side tables are needed for filters and for ORDER BY over
+    # term (non-count) columns
+    needs_values: bool = False
+    agg_vars: tuple[str, ...] = ()
+    # a global COUNT (aggregate without GROUP BY) answers one row even
+    # over an empty store — the empty-store shortcut needs to know
+    global_agg_alias: str | None = None
 
     def explain(self, indent: str = "") -> str:
-        """Human-readable operator tree (cost annotations included)."""
+        """Human-readable operator tree (cost annotations included).  The
+        plan is a DAG — union arms and optional chains share subtrees — so
+        a subtree already printed shows as one ``(shared ...)`` line
+        instead of being expanded again (also keeps explain linear, not
+        exponential, in the number of optional groups)."""
         lines: list[str] = []
+        seen: set[int] = set()
 
         def walk(node: Node, depth: int) -> None:
             pad = indent + "  " * depth
+            if node.node_id in seen:
+                lines.append(
+                    f"{pad}(shared {type(node).__name__} "
+                    f"node#{node.node_id} — expanded above)"
+                )
+                return
+            seen.add(node.node_id)
             if isinstance(node, Scan):
                 lines.append(
                     f"{pad}Scan[{node.order}] pattern#{node.pattern_pos} "
@@ -305,6 +410,23 @@ class Plan:
                     f"bind={[v for _, v in node.bound_slots]} "
                     f"+{[v for _, v in node.free_slots]}"
                 )
+            if isinstance(node, UnionNode):
+                extra = f" arms={len(node.arms)}"
+            if isinstance(node, TagRows):
+                extra = f" +{node.var}"
+            if isinstance(node, LeftFinish):
+                extra = f" rowid={node.rowid}"
+            if isinstance(node, Group):
+                count = (
+                    f" count({node.count_var or '*'}) as {node.alias}"
+                    if node.alias
+                    else ""
+                )
+                extra = f" by={list(node.keys) or 'all'}{count}"
+            if isinstance(node, OrderBy):
+                extra = " " + ",".join(
+                    f"{'+' if asc else '-'}{v}" for v, asc, _ in node.keys
+                )
             if isinstance(node, Limit):
                 extra = f" n={node.n}"
             lines.append(f"{pad}{name}{extra} est={node.est}")
@@ -322,6 +444,10 @@ def _children(node: Node) -> tuple[Node, ...]:
         return (node.left, node.right)
     if isinstance(node, BindJoin):
         return (node.left,)
+    if isinstance(node, UnionNode):
+        return node.arms
+    if isinstance(node, LeftFinish):
+        return (node.left, node.right)
     return (node.child,)
 
 
@@ -466,6 +592,18 @@ class _Builder:
             return self.bind_join(left, scan, kind)
         return self.join(left, scan, kind)
 
+    def union(self, arms: list[Node]) -> UnionNode:
+        out: dict[str, None] = {}
+        for a in arms:
+            for v in a.out_vars:
+                out.setdefault(v)
+        return UnionNode(
+            node_id=self.nid(),
+            arms=tuple(arms),
+            out_vars=tuple(out),
+            est=max(sum(a.est for a in arms), 0),
+        )
+
     def filter(self, child: Node, expr: LExpr) -> Filter:
         return Filter(
             node_id=self.nid(),
@@ -476,18 +614,12 @@ class _Builder:
         )
 
 
-def _fold_bgp(
-    b: _Builder,
-    scans: list[Scan],
-    attach_filters=None,
-) -> Node:
-    """Greedy smallest-first fold preferring connected scans; optionally
-    calls ``attach_filters(node) -> node`` after every step so filters apply
-    as soon as their variables are in scope."""
+def _fold_onto(b: _Builder, node: Node, scans: list[Scan], attach=None) -> Node:
+    """Greedy smallest-first fold of ``scans`` onto an accumulated ``node``,
+    preferring connected scans; optionally calls ``attach(node) -> node``
+    after every step so filters apply as soon as their variables are in
+    scope."""
     remaining = sorted(scans, key=lambda s: (s.est, s.node_id))
-    node: Node = remaining.pop(0)
-    if attach_filters is not None:
-        node = attach_filters(node)
     while remaining:
         i = next(
             (
@@ -499,9 +631,18 @@ def _fold_bgp(
             0,  # nothing connected: cross-join the smallest remaining
         )
         node = b.combine(node, remaining.pop(i))
-        if attach_filters is not None:
-            node = attach_filters(node)
+        if attach is not None:
+            node = attach(node)
     return node
+
+
+def _fold_bgp(b: _Builder, scans: list[Scan], attach=None) -> Node:
+    """Greedy smallest-first fold of a whole BGP."""
+    remaining = sorted(scans, key=lambda s: (s.est, s.node_id))
+    node: Node = remaining.pop(0)
+    if attach is not None:
+        node = attach(node)
+    return _fold_onto(b, node, remaining, attach)
 
 
 def plan_query(store: TripleStore, q: A.SelectQuery) -> Plan:
@@ -518,22 +659,23 @@ def plan_query(store: TripleStore, q: A.SelectQuery) -> Plan:
     n_filter_ops = cursor[0]
     eventually_bound = set(q.scope())
     required_vars = {v for pat in q.patterns for v in pat.variables}
-    pending = list(zip(lowered, (A.expr_variables(f) for f in q.filters)))
-    pending = [(e, tuple(vs)) for e, (vs) in pending]
+    pending = [
+        (e, tuple(A.expr_variables(f))) for e, f in zip(lowered, q.filters)
+    ]
 
     def ready(filter_vars: tuple[str, ...], scope: tuple[str, ...]) -> bool:
         return all(
             (v in scope) or (v not in eventually_bound) for v in filter_vars
         )
 
-    def attach(node: Node) -> Node:
+    def attach_required(node: Node) -> Node:
+        # inside the required fold only filters that never touch union- or
+        # optional-bound variables may run (those can still add
+        # rows/bindings these filters must see)
         changed = True
         while changed:
             changed = False
             for i, (expr, fvars) in enumerate(pending):
-                # inside the required fold only filters that never touch
-                # optional-bound variables may run (OPTIONAL can still add
-                # rows/bindings these filters must see)
                 if all(
                     v in required_vars or v not in eventually_bound
                     for v in fvars
@@ -544,51 +686,116 @@ def plan_query(store: TripleStore, q: A.SelectQuery) -> Plan:
                     break
         return node
 
-    scan_list: list[Scan] = []
-    required_scans = []
-    for pos, pat in enumerate(q.patterns):
-        s = b.scan(pos, pat, ests[pos])
-        required_scans.append(s)
-        scan_list.append(s)
-    node = _fold_bgp(b, required_scans, attach_filters=attach)
+    def attach_ready(node: Node) -> Node:
+        # filters whose variables just became bound attach now
+        for i in range(len(pending) - 1, -1, -1):
+            expr, fvars = pending[i]
+            if ready(fvars, node.out_vars):
+                node = b.filter(node, expr)
+                pending.pop(i)
+        return node
+
+    node: Node | None = None
+    if q.patterns:
+        required_scans = [
+            b.scan(pos, pat, ests[pos])
+            for pos, pat in enumerate(q.patterns)
+        ]
+        node = _fold_bgp(b, required_scans, attach=attach_required)
 
     pos0 = len(q.patterns)
+    if q.unions:
+        arm_nodes: list[Node] = []
+        for arm in q.unions:
+            ascans = [
+                b.scan(pos0 + k, pat, ests[pos0 + k])
+                for k, pat in enumerate(arm)
+            ]
+            pos0 += len(arm)
+            if node is None:
+                arm_nodes.append(_fold_bgp(b, ascans))
+            else:
+                # shared-scan reuse: every arm folds onto the SAME required
+                # subtree object; the executor memoizes it per dispatch
+                arm_nodes.append(_fold_onto(b, node, ascans))
+        node = b.union(arm_nodes)
+        node = attach_ready(node)
+    assert node is not None  # parse_select guarantees patterns or unions
+
     for group in q.optionals:
-        gscans = []
-        for k, pat in enumerate(group):
-            s = b.scan(pos0 + k, pat, ests[pos0 + k])
-            gscans.append(s)
-            scan_list.append(s)
+        gscans = [
+            b.scan(pos0 + k, pat, ests[pos0 + k])
+            for k, pat in enumerate(group)
+        ]
         pos0 += len(group)
         if len(gscans) == 1:
             # the common OPTIONAL shape: one pattern, bind-joined with
             # unmatched-row backfill (never materialized on its own)
             node = b.combine(node, gscans[0], "left")
         else:
-            gnode = _fold_bgp(b, gscans)
-            node = b.join(node, gnode, "left")
-        # filters whose variables just became bound (optional vars) attach now
-        for i in range(len(pending) - 1, -1, -1):
-            expr, fvars = pending[i]
-            if ready(fvars, node.out_vars):
-                node = b.filter(node, expr)
-                pending.pop(i)
+            # multi-pattern group: a bind-join chain off the required
+            # scope — tag left rows, chain the group's patterns as inner
+            # joins anchored on the left bindings, then append unmatched
+            # left rows (group variables unbound)
+            rowid = f"@row{node.node_id}"
+            tagged = TagRows(
+                node_id=b.nid(),
+                child=node,
+                var=rowid,
+                out_vars=node.out_vars + (rowid,),
+                est=node.est,
+            )
+            chain = _fold_onto(b, tagged, gscans)
+            gvars = tuple(
+                v for v in chain.out_vars
+                if v not in tagged.out_vars
+            )
+            node = LeftFinish(
+                node_id=b.nid(),
+                left=tagged,
+                right=chain,
+                rowid=rowid,
+                out_vars=node.out_vars + gvars,
+                est=max(chain.est + node.est, 0),
+            )
+        node = attach_ready(node)
 
     # any filter still pending mentions only never-bound variables
     for expr, _ in pending:
         node = b.filter(node, expr)
 
     out_vars = q.out_vars()
-    node = Project(
-        node_id=b.nid(), child=node, out_vars=out_vars, est=node.est
-    )
-    if q.distinct:
-        node = Distinct(
-            node_id=b.nid(), child=node, out_vars=out_vars, est=node.est
+    agg_vars = (q.agg.alias,) if q.agg else ()
+    if q.agg is not None or q.group_by:
+        node = Group(
+            node_id=b.nid(),
+            child=node,
+            keys=q.group_by,
+            count_var=q.agg.var if q.agg else None,
+            alias=q.agg.alias if q.agg else None,
+            out_vars=out_vars,
+            est=node.est if q.group_by else 1,
         )
     else:
+        node = Project(
+            node_id=b.nid(), child=node, out_vars=out_vars, est=node.est
+        )
+        if q.distinct:
+            node = Distinct(
+                node_id=b.nid(), child=node, out_vars=out_vars, est=node.est
+            )
+    if q.order_by:
+        node = OrderBy(
+            node_id=b.nid(),
+            child=node,
+            keys=tuple((v, asc, v in agg_vars) for v, asc in q.order_by),
+            out_vars=out_vars,
+            est=node.est,
+        )
+    elif not q.distinct:
         # Distinct leaves rows sorted; otherwise sort explicitly so results
-        # are deterministically ordered by term id
+        # are deterministically ordered by term id (count columns by value);
+        # the executor elides it when the tracked sortedness already matches
         node = Sort(node_id=b.nid(), child=node, out_vars=out_vars, est=node.est)
     if q.limit is not None:
         node = Limit(
@@ -599,22 +806,36 @@ def plan_query(store: TripleStore, q: A.SelectQuery) -> Plan:
             est=min(node.est, q.limit),
         )
     # pattern readers must be listed in pipeline (fold) order for the
-    # consts matrix; recover that order from the tree
-    ordered: list[Union[Scan, BindJoin]] = []
+    # consts matrix; recover that order from the tree — which is a DAG
+    # where union arms / optional chains share subtrees, so visit each
+    # node once
+    ordered: list[TUnion[Scan, BindJoin]] = []
+    seen: set[int] = set()
 
     def collect(n: Node) -> None:
+        if n.node_id in seen:
+            return
+        seen.add(n.node_id)
         for c in _children(n):
             collect(c)
         if isinstance(n, (Scan, BindJoin)):
             ordered.append(n)
 
     collect(node)
+    term_order_keys = bool(q.order_by) and any(
+        v not in agg_vars for v, _ in q.order_by
+    )
     return Plan(
         sig=q.signature(),
         root=node,
         scans=tuple(ordered),
         n_filter_ops=n_filter_ops,
         has_filters=bool(q.filters),
+        needs_values=bool(q.filters) or term_order_keys,
+        agg_vars=agg_vars,
+        global_agg_alias=(
+            q.agg.alias if (q.agg is not None and not q.group_by) else None
+        ),
     )
 
 

@@ -10,6 +10,13 @@ object per line, one response line per request, ``id`` echoed back):
     -> {"id": 2, "query": "...", "limit": 10}     # decode at most 10 rows
        (without "limit", decoded rows are capped at ``max_rows`` — 1000 by
        default; "n_total" always reports the full solution count)
+
+    -> {"id": 3, "query": "SELECT ?g (COUNT(*) AS ?n) WHERE { ?m <p> ?g }
+                           GROUP BY ?g ORDER BY DESC(?n)"}
+    <- {"id": 3, "vars": ["?g", "?n"], "agg_vars": ["?n"],
+        "rows": [["<g1>", 7], ["<g0>", 3]], ...}
+       (aggregate columns listed in "agg_vars" carry JSON numbers, not
+       rendered terms; UNION / ORDER BY answers look like plain rows)
     -> {"op": "ping"}                              <- {"ok": true}
     -> {"op": "stats"}                             <- running counters
     -> {"op": "explain", "query": "..."}           <- the planned operator tree
@@ -39,6 +46,7 @@ import time
 from repro.kg.store import TripleStore
 from repro.serve import algebra
 from repro.serve.exec import Executor, get_executor
+from repro.serve.values import value_table
 
 
 @dataclasses.dataclass
@@ -84,6 +92,10 @@ class KGServer:
     ):
         self.store = store
         self.executor: Executor = get_executor(store)
+        # build the value-typed rank side tables (FILTER / ORDER BY keys)
+        # on device now, at server store-load time, so no client ever pays
+        # the per-term decode loop on the first filtered or ordered query
+        value_table(store)
         self.max_batch = max_batch
         self.max_rows = max_rows
         self.linger_s = linger_ms / 1e3
@@ -275,16 +287,19 @@ class KGServer:
             # counts so one huge answer cannot stall every other batch
             # (n_total still reports the full solution count)
             limit = p.limit if p.limit is not None else self.max_rows
-            p.reply(
-                {
-                    "id": p.req_id,
-                    "vars": list(result.vars),
-                    "rows": [list(r) for r in result.rows(i, limit=limit)],
-                    "n_total": result.n(i),
-                    "batch_size": len(group),
-                    "latency_ms": round(lat_ms, 3),
-                }
-            )
+            reply = {
+                "id": p.req_id,
+                "vars": list(result.vars),
+                "rows": [list(r) for r in result.rows(i, limit=limit)],
+                "n_total": result.n(i),
+                "batch_size": len(group),
+                "latency_ms": round(lat_ms, 3),
+            }
+            if result.agg_vars:
+                # aggregate (COUNT) columns: their row cells are JSON
+                # numbers, not rendered terms — name them for the client
+                reply["agg_vars"] = list(result.agg_vars)
+            p.reply(reply)
         now = time.perf_counter()
         if self.log and now - self._last_log > 1.0:
             self._last_log = now

@@ -1,7 +1,9 @@
-"""Literal-value side tables — FILTER comparisons over encoded term ids.
+"""Literal-value side tables — FILTER / ORDER BY semantics over term ids.
 
-The executor never touches strings at query time; comparisons run on dense
-*rank* tables decoded once per store (cached on the store object):
+The executor never touches strings at query time; comparisons and
+value-typed ordering run on dense *rank* tables built once per store
+(cached on the store object; ``KGServer`` constructs them eagerly at
+server store-load so no client pays the cost on its first query):
 
 * ``num_rank[t]`` — rank of term ``t``'s numeric value among the store's
   distinct numeric literal values (``-1`` if the term is not a numeric
@@ -13,6 +15,12 @@ The executor never touches strings at query time; comparisons run on dense
   order, the SPARQL ``STR()`` comparison our lite semantics uses.
 * ``is_num`` / ``is_lit`` — participation masks (SPARQL type errors make a
   comparison false, they never crash).
+* ``order_rank[t]`` — the ``ORDER BY`` total order: IRIs (by rendered
+  term) < numeric literals (by value) < other literals (by raw body),
+  ties broken by rendered term (= term id), so the order is a permutation
+  and identical across stores of the same graph.  Built *on device*: the
+  int32 class/rank/tie keys are lexsorted with jax and scattered back —
+  only the string/number extraction stays on host.
 
 Constants are resolved to rank *bounds* on the host at plan/encode time
 with a binary search over the kept sorted-unique tables, so a constant
@@ -33,13 +41,17 @@ from repro.kg.store import TripleStore
 @dataclasses.dataclass(frozen=True)
 class ValueTable:
     # device (jnp) arrays, one entry per term id
-    is_lit: jnp.ndarray    # bool[T]
-    is_num: jnp.ndarray    # bool[T]
-    str_rank: jnp.ndarray  # int32[T], -1 for non-literals
-    num_rank: jnp.ndarray  # int32[T], -1 for non-numerics
+    is_lit: jnp.ndarray      # bool[T]
+    is_num: jnp.ndarray      # bool[T]
+    str_rank: jnp.ndarray    # int32[T], -1 for non-literals
+    num_rank: jnp.ndarray    # int32[T], -1 for non-numerics
+    order_rank: jnp.ndarray  # int32[T], a permutation (the ORDER BY key)
+    # True when order_rank is the identity: value order == term-id order,
+    # so an ORDER BY over already-term-id-sorted rows can be elided
+    order_is_tid: bool
     # host tables for constant rank lookup
-    str_uniq: np.ndarray   # object[Us]  sorted distinct literal bodies
-    num_uniq: np.ndarray   # float64[Un] sorted distinct numeric values
+    str_uniq: np.ndarray     # object[Us]  sorted distinct literal bodies
+    num_uniq: np.ndarray     # float64[Un] sorted distinct numeric values
 
     def num_bounds(self, value: float) -> tuple[int, int]:
         """``(lo, hi)`` ranks such that a term compares to ``value`` as its
@@ -108,11 +120,25 @@ def value_table(store: TripleStore) -> ValueTable:
         num_rank[is_num] = inv.astype(np.int32)
     else:
         num_uniq = np.empty(0, np.float64)
+    # the ORDER BY total order, built on device from int32 keys: class
+    # (iri < numeric < other literal), the within-class value rank, term id
+    # as the tie-break.  order_rank[perm[i]] = i makes it a permutation.
+    tid = np.arange(T, dtype=np.int32)
+    cls = np.where(~is_lit, 0, np.where(is_num, 1, 2)).astype(np.int32)
+    within = np.where(
+        ~is_lit, tid, np.where(is_num, num_rank, str_rank)
+    ).astype(np.int32)
+    perm = jnp.lexsort((jnp.asarray(tid), jnp.asarray(within), jnp.asarray(cls)))
+    arange = jnp.arange(T, dtype=jnp.int32)
+    order_rank = jnp.zeros(T, jnp.int32).at[perm].set(arange)
+    order_is_tid = bool(jnp.all(perm == arange))
     table = ValueTable(
         is_lit=jnp.asarray(is_lit),
         is_num=jnp.asarray(is_num),
         str_rank=jnp.asarray(str_rank),
         num_rank=jnp.asarray(num_rank),
+        order_rank=order_rank,
+        order_is_tid=order_is_tid,
         str_uniq=str_uniq,
         num_uniq=num_uniq,
     )

@@ -106,6 +106,47 @@ def test_parse_filter_grammar():
     assert q.signature() != q3.signature()
 
 
+def test_parse_union_group_order_forms():
+    q = parse_select(
+        "SELECT ?s ?x WHERE { ?s <http://p> ?v "
+        "{ ?s <http://q> ?x } UNION { ?s <http://r> ?x } } ORDER BY DESC(?x)"
+    )
+    assert len(q.unions) == 2 and q.order_by == (("?x", False),)
+    assert q.scope() == ("?s", "?v", "?x")
+    assert q.union_always_vars() == {"?s", "?x"}
+    # partial arm vars are tracked for validation
+    q2 = parse_select(
+        "SELECT * WHERE { { ?s <http://q> ?x } UNION { ?s <http://r> ?y } }"
+    )
+    assert q2.union_partial_vars() == {"?x", "?y"}
+    assert q2.out_vars() == ("?s", "?x", "?y")
+    # aggregates: alias rides at its SELECT position
+    q3 = parse_select(
+        "SELECT ?g (COUNT(?m) AS ?n) WHERE { ?m <http://p> ?g } "
+        "GROUP BY ?g ORDER BY DESC(?n) ?g LIMIT 4"
+    )
+    assert q3.agg.var == "?m" and q3.agg.alias == "?n"
+    assert q3.out_vars() == ("?g", "?n") and q3.group_by == ("?g",)
+    assert q3.order_by == (("?n", False), ("?g", True))
+    q4 = parse_select("SELECT (COUNT(*) AS ?n) WHERE { ?s ?p ?o }")
+    assert q4.agg.var is None and q4.out_vars() == ("?n",)
+    # signatures: constants abstracted, structure (arms/keys/dirs) kept
+    a = parse_select(
+        'SELECT * WHERE { { ?s <http://a> "1" } UNION { ?s <http://b> ?o } }'
+    )
+    b = parse_select(
+        'SELECT * WHERE { { ?s <http://zz> "9" } UNION { ?s <http://b> ?o } }'
+    )
+    assert a.signature() == b.signature()
+    c = parse_select(
+        "SELECT * WHERE { { ?s <http://a> ?o } UNION { ?s <http://b> ?o } }"
+    )
+    assert a.signature() != c.signature()
+    up = parse_select("SELECT ?s ?o WHERE { ?s <http://p> ?o } ORDER BY ?o")
+    down = parse_select("SELECT ?s ?o WHERE { ?s <http://p> ?o } ORDER BY DESC(?o)")
+    assert up.signature() != down.signature()
+
+
 def test_parse_errors():
     for bad in (
         "SELECT WHERE { ?s <http://p> ?o }",            # no var list
@@ -115,9 +156,29 @@ def test_parse_errors():
         "SELECT * WHERE { ?s <http://p> ?o FILTER(3 < 4) }",  # no variable
         "SELECT * WHERE { ?s <http://p> ?o FILTER(?s < <http://x>) }",
         "SELECT * WHERE { ?s <http://p> ?o } trailing",
+        "SELECT * WHERE { { ?s <http://p> ?o } }",        # 1-arm brace
+        "SELECT * WHERE { { } UNION { ?s <http://p> ?o } }",
+        "SELECT ?o WHERE { ?s ?p ?o } GROUP BY ?s",       # non-key selected
+        "SELECT * WHERE { ?s ?p ?o } GROUP BY ?s",        # * with GROUP BY
+        "SELECT DISTINCT (COUNT(*) AS ?n) WHERE { ?s ?p ?o }",
+        "SELECT (COUNT(*) AS ?o) WHERE { ?s ?p ?o }",     # alias collision
+        "SELECT (COUNT(?x) AS ?a) (COUNT(*) AS ?b) WHERE { ?s ?p ?o }",
+        "SELECT ?s WHERE { ?s <http://p> ?o } ORDER BY ?o",  # key not projected
+        "SELECT ?s WHERE { ?s <http://p> ?o } ORDER BY",
     ):
         with pytest.raises(ValueError):
             parse_select(bad)
+    # OPTIONAL may not join on a variable bound in only SOME union arms
+    with pytest.raises(ValueError, match="OPTIONAL groups"):
+        parse_select(
+            "SELECT * WHERE { { ?s <http://q> ?x } UNION { ?s <http://r> ?y } "
+            "OPTIONAL { ?x <http://t> ?z } }"
+        )
+    # ...but a variable bound in EVERY arm is fine
+    parse_select(
+        "SELECT * WHERE { { ?s <http://q> ?x } UNION { ?s <http://r> ?x } "
+        "OPTIONAL { ?x <http://t> ?z } }"
+    )
     # optional groups may not share optional-only variables
     with pytest.raises(ValueError, match="OPTIONAL groups"):
         parse_select(
@@ -217,6 +278,96 @@ def test_multi_pattern_optional_group():
     )
 
 
+def test_union_semantics():
+    store = _small_store()
+    for qtext in (
+        # plain 2-arm union over one variable
+        "SELECT * WHERE { { ?s <http://ex/p> ?v } UNION "
+        "{ ?s <http://ex/q> ?v } }",
+        # partial-arm variables come back unbound in the other arm's rows
+        "SELECT * WHERE { { ?s <http://ex/q> ?h } UNION "
+        "{ ?s <http://ex/r> ?t } }",
+        # union joined with a required pattern (shared-scan arms)
+        "SELECT * WHERE { ?s <http://ex/p> ?v "
+        "{ ?s <http://ex/q> ?h } UNION { ?s <http://ex/r> ?t } }",
+        # three arms; duplicate solutions keep bag multiplicity
+        "SELECT ?s WHERE { { ?s <http://ex/p> ?v } UNION "
+        "{ ?s <http://ex/p> ?v } UNION { ?s <http://ex/q> ?h } }",
+        # an arm whose constant the store has never seen is empty
+        "SELECT * WHERE { { ?s <http://ex/none> ?v } UNION "
+        "{ ?s <http://ex/q> ?v } }",
+        # filters over arm-bound variables apply after the union
+        'SELECT * WHERE { { ?s <http://ex/p> ?v } UNION '
+        '{ ?s <http://ex/q> ?v } FILTER(?v >= "hi" || ?v <= 3) }',
+        # bound() distinguishes which arm produced a row
+        "SELECT * WHERE { { ?s <http://ex/q> ?h } UNION "
+        "{ ?s <http://ex/r> ?t } FILTER(bound(?h)) }",
+        # DISTINCT collapses cross-arm duplicates
+        "SELECT DISTINCT ?s WHERE { { ?s <http://ex/p> ?v } UNION "
+        "{ ?s <http://ex/q> ?h } }",
+        # OPTIONAL over a variable bound in every arm
+        "SELECT * WHERE { { ?s <http://ex/p> ?v } UNION "
+        "{ ?s <http://ex/q> ?v } OPTIONAL { ?s <http://ex/r> ?t } }",
+    ):
+        check(store, qtext)
+
+
+def test_orderby_value_typed_not_term_order():
+    store = _small_store()
+    # term-id (rendered) order puts "10" before "3"; value order must not
+    q = parse_select(
+        "SELECT ?s ?v WHERE { ?s <http://ex/p> ?v } ORDER BY ?v"
+    )
+    rows = solve_select(store, q).rows(0)
+    assert rows == oracle_select(store, q)
+    vals = [r[1] for r in rows]
+    assert vals == ['"3"', '"10"', '"abc"']  # 3 < 10 numerically, "abc" last
+    # DESC reverses the whole key, unbound (OPTIONAL miss) sorts last
+    for qtext in (
+        "SELECT ?s ?v WHERE { ?s <http://ex/p> ?v } ORDER BY DESC(?v)",
+        "SELECT ?s ?h WHERE { ?s <http://ex/p> ?v "
+        "OPTIONAL { ?s <http://ex/q> ?h } } ORDER BY ?h",
+        "SELECT ?s ?h WHERE { ?s <http://ex/p> ?v "
+        "OPTIONAL { ?s <http://ex/q> ?h } } ORDER BY DESC(?h)",
+        # multi-key with mixed directions; LIMIT takes the top-k
+        "SELECT ?s ?v WHERE { ?s ?p ?v } ORDER BY DESC(?v) ?s LIMIT 3",
+        # iris order by rendered term
+        "SELECT ?t WHERE { ?s <http://ex/r> ?t } ORDER BY DESC(?t)",
+    ):
+        check(store, qtext)
+
+
+def test_group_count_semantics():
+    store = _small_store()
+    for qtext in (
+        "SELECT ?s (COUNT(?o) AS ?n) WHERE { ?s ?p ?o } GROUP BY ?s",
+        "SELECT ?p (COUNT(*) AS ?n) WHERE { ?s ?p ?o } GROUP BY ?p "
+        "ORDER BY DESC(?n)",
+        # COUNT(?v) counts only bound rows (OPTIONAL misses don't count)
+        "SELECT ?s (COUNT(?h) AS ?n) WHERE { ?s <http://ex/p> ?v "
+        "OPTIONAL { ?s <http://ex/q> ?h } } GROUP BY ?s",
+        # global aggregate: one row even over zero solutions
+        "SELECT (COUNT(*) AS ?n) WHERE { ?s <http://ex/p> ?v }",
+        "SELECT (COUNT(*) AS ?n) WHERE { ?s <http://ex/none> ?v }",
+        # GROUP BY without COUNT = distinct keys
+        "SELECT ?p WHERE { ?s ?p ?o } GROUP BY ?p",
+        # grouping keys not selected still partition the groups
+        "SELECT (COUNT(*) AS ?n) WHERE { ?s ?p ?o } GROUP BY ?s ?p",
+        # aggregation over a union, ordered by the count
+        "SELECT ?s (COUNT(*) AS ?n) WHERE { { ?s <http://ex/p> ?v } UNION "
+        "{ ?s <http://ex/q> ?v } } GROUP BY ?s ORDER BY DESC(?n) ?s LIMIT 2",
+    ):
+        check(store, qtext)
+    # counts arrive as plain ints and are flagged on the result
+    q = parse_select(
+        "SELECT ?s (COUNT(?o) AS ?n) WHERE { ?s ?p ?o } GROUP BY ?s"
+    )
+    res = solve_select(store, q)
+    assert res.agg_vars == ("?n",)
+    assert all(isinstance(r[1], int) for r in res.rows(0))
+    assert sum(r[1] for r in res.rows(0)) == store.n_triples
+
+
 def test_from_ntriples_template_chars():
     store = TripleStore.from_ntriples(
         [("<http://ex/s>", "<http://ex/p>", '"braces {} inside"')]
@@ -253,6 +404,44 @@ TEMPLATES = [
         f'SELECT * WHERE {{ ?s {p[0]} ?o '
         f'FILTER(?o >= "a" || ?o = {o[0]}) }}'
     ),
+    # --- UNION arms ---
+    lambda p, o, x: (
+        f"SELECT * WHERE {{ {{ ?s {p[0]} ?o }} UNION {{ ?s {p[1]} ?o }} }}"
+    ),
+    lambda p, o, x: (  # partial-arm variables; empty arm when o[0] rare
+        f"SELECT * WHERE {{ {{ ?s {p[0]} {o[0]} }} UNION "
+        f"{{ ?s {p[1]} ?r }} }}"
+    ),
+    lambda p, o, x: (  # union joined with a required pattern + filter
+        f"SELECT * WHERE {{ ?s {p[0]} ?o "
+        f"{{ ?s {p[1]} ?r }} UNION {{ ?o {p[1]} ?r }} "
+        f"FILTER(?o != {o[0]}) }}"
+    ),
+    # --- ORDER BY keys ---
+    lambda p, o, x: (
+        f"SELECT ?s ?o WHERE {{ ?s {p[0]} ?o }} ORDER BY DESC(?o) LIMIT 4"
+    ),
+    lambda p, o, x: (
+        f"SELECT ?s ?o WHERE {{ ?s {p[0]} ?o }} ORDER BY ?o ?s"
+    ),
+    lambda p, o, x: (  # order over an optional (maybe-unbound) column
+        f"SELECT ?o ?r WHERE {{ ?s {p[0]} ?o "
+        f"OPTIONAL {{ ?s {p[1]} ?r }} }} ORDER BY DESC(?r) ?o LIMIT 5"
+    ),
+    # --- GROUP BY / COUNT ---
+    lambda p, o, x: (
+        "SELECT ?s (COUNT(?o) AS ?n) WHERE { ?s ?p ?o } GROUP BY ?s "
+        "ORDER BY DESC(?n) ?s"
+    ),
+    lambda p, o, x: f"SELECT (COUNT(*) AS ?n) WHERE {{ ?s {p[0]} ?o }}",
+    lambda p, o, x: (  # count a maybe-unbound variable per group
+        f"SELECT ?o (COUNT(?r) AS ?n) WHERE {{ ?s {p[0]} ?o "
+        f"OPTIONAL {{ ?s {p[1]} ?r }} }} GROUP BY ?o"
+    ),
+    lambda p, o, x: (  # aggregate over a union
+        f"SELECT ?s (COUNT(*) AS ?n) WHERE {{ {{ ?s {p[0]} ?o }} UNION "
+        f"{{ ?s {p[1]} ?o }} }} GROUP BY ?s ORDER BY DESC(?n) LIMIT 3"
+    ),
 ]
 
 
@@ -280,6 +469,20 @@ def test_empty_graph_edge_cases():
         "SELECT * WHERE { ?s <http://ex/p> ?o "
         "OPTIONAL { ?s <http://ex/q> ?h } FILTER(?o > 1) }",
     )
+    # the new algebra over nothing: unions and keyed groups answer zero
+    # rows, a global COUNT answers exactly one zero row
+    check(
+        store,
+        "SELECT * WHERE { { ?s <http://ex/p> ?o } UNION "
+        "{ ?s <http://ex/q> ?o } }",
+    )
+    check(store, "SELECT ?o WHERE { ?s ?p ?o } ORDER BY DESC(?o)")
+    check(store, "SELECT ?p (COUNT(*) AS ?n) WHERE { ?s ?p ?o } GROUP BY ?p")
+    check(store, "SELECT (COUNT(*) AS ?n) WHERE { ?s ?p ?o }")
+    assert oracle_select(
+        store, parse_select("SELECT (COUNT(*) AS ?n) WHERE { ?s ?p ?o }")
+    ) == [(0,)]
+    check(store, "SELECT (COUNT(*) AS ?n) WHERE { ?s ?p ?o } LIMIT 0")
 
 
 def test_all_unbound_scan_matches_oracle():
@@ -400,6 +603,62 @@ def test_batched_queries_match_individual():
         assert res.rows(i) == oracle_select(store, q)
 
 
+def test_new_operators_run_fused_batches():
+    """UNION / ORDER BY / GROUP BY-COUNT queries with equal signatures run
+    as ONE batched device dispatch (the server's micro-batch unit) — no
+    per-query host fallback — and still match the oracle per query."""
+    store = rand_store(23, 25)
+    ex = get_executor(store)
+    for template in (
+        "SELECT * WHERE {{ {{ ?s {a} ?o }} UNION {{ ?s {b} ?o }} }}",
+        "SELECT ?s ?o WHERE {{ ?s {a} ?o }} ORDER BY DESC(?o) LIMIT 3",
+        "SELECT ?o (COUNT(?s) AS ?n) WHERE {{ ?s {a} ?o }} GROUP BY ?o "
+        "ORDER BY DESC(?n)",
+    ):
+        queries = [
+            parse_select(template.format(a=a, b=b))
+            for a in PREDS
+            for b in PREDS
+        ][:6]
+        sig = queries[0].signature()
+        assert all(q.signature() == sig for q in queries)
+        plan = ex.plan(queries[0])
+        ex.execute(plan, queries)  # warm: compile + capacity convergence
+        before = ex.dispatches
+        res = ex.execute(plan, queries)
+        assert ex.dispatches - before == 1, "batch must be one fused dispatch"
+        for i, q in enumerate(queries):
+            assert res.rows(i) == oracle_select(store, q), template
+
+
+def test_new_operators_survive_store_roundtrips(tmp_path):
+    """UNION / ORDER BY / COUNT answers (and their order) are identical
+    across the eager store, a streamed-ingestion store, and a .kgz
+    save/load roundtrip — term ids are ranks of rendered terms."""
+    tb = generator.make_testbed("SOM", 300, 0.5, n_poms=2, seed=13)
+    eager = create_kg(tb.doc, tables=_tables(tb)).to_store()
+    streamed = create_kg(
+        tb.doc, tables=_tables(tb), stream=True, block_rows=64
+    ).to_store()
+    path = str(tmp_path / "kg.kgz")
+    persist.save(eager, path)
+    loaded = persist.load(path)
+    preds = sorted({eager.decode_term(int(t)) for t in np.unique(eager.p)})
+    queries = [
+        f"SELECT * WHERE {{ {{ ?m {preds[0]} ?x }} UNION "
+        f"{{ ?m {preds[1]} ?x }} }}",
+        f"SELECT ?m ?x WHERE {{ ?m {preds[0]} ?x }} ORDER BY DESC(?x) LIMIT 7",
+        f"SELECT ?x (COUNT(?m) AS ?n) WHERE {{ ?m {preds[0]} ?x }} "
+        "GROUP BY ?x ORDER BY DESC(?n) ?x",
+    ]
+    for qtext in queries:
+        q = parse_select(qtext)
+        want = oracle_select(eager, q)
+        assert solve_select(eager, q).rows(0) == want
+        assert solve_select(streamed, q).rows(0) == want
+        assert solve_select(loaded, q).rows(0) == want
+
+
 # --------------------------------------------------------------------------
 # open_store cache
 # --------------------------------------------------------------------------
@@ -476,6 +735,42 @@ def test_server_end_to_end():
         with connect("127.0.0.1", srv.port) as c:
             stats = c.stats()
             assert stats["queries"] >= 13 and stats["errors"] >= 1
+    finally:
+        srv.stop()
+
+
+def test_server_union_and_aggregate_wire_answers():
+    """UNION rows and COUNT aggregates decode over the wire: counts are
+    JSON numbers and the answer names its aggregate columns."""
+    from repro.serve.client import connect
+    from repro.serve.server import KGServer
+
+    store = _small_store()
+    srv = KGServer(store, port=0, linger_ms=1.0, log=False).start()
+    try:
+        with connect("127.0.0.1", srv.port, retry_s=5.0) as c:
+            u = c.query(
+                "SELECT * WHERE { { ?s <http://ex/p> ?v } UNION "
+                "{ ?s <http://ex/q> ?v } }"
+            )
+            want = oracle_select(
+                store,
+                parse_select(
+                    "SELECT * WHERE { { ?s <http://ex/p> ?v } UNION "
+                    "{ ?s <http://ex/q> ?v } }"
+                ),
+            )
+            assert [tuple(r) for r in u["rows"]] == want
+            assert "agg_vars" not in u
+            g = c.query(
+                "SELECT ?s (COUNT(?o) AS ?n) WHERE { ?s ?p ?o } "
+                "GROUP BY ?s ORDER BY DESC(?n)"
+            )
+            assert g["vars"] == ["?s", "?n"] and g["agg_vars"] == ["?n"]
+            assert all(isinstance(row[1], int) for row in g["rows"])
+            assert sum(row[1] for row in g["rows"]) == store.n_triples
+            ns = [row[1] for row in g["rows"]]
+            assert ns == sorted(ns, reverse=True)
     finally:
         srv.stop()
 
