@@ -8,11 +8,14 @@ CI runs the bench sections into ``bench-out/`` and then::
 For every ``BENCH_*.json`` in ``--new-dir`` that also exists (committed)
 in ``--baseline-dir``, every ``queries_per_s`` leaf is compared: the gate
 **fails** (exit 1) when a leaf regresses by more than ``--threshold``
-(default 30%).  ``rows_per_s`` leaves are reported but never gated
-(ingestion numbers are tracked, not enforced).  Leaves with a zero or
-missing baseline — a new query class, an empty-store section — are
-reported as ``new`` and never gated, so adding classes does not require
-touching the gate.
+(default 30%).  **Tail latency is gated too**: every ``latency_p99_ms``
+leaf fails the gate when it grows by more than ``--latency-threshold``
+(default 50%) after machine-speed normalization — so the regression
+harness sees what users feel, not just mean throughput.
+``rows_per_s`` and ``latency_p50_ms`` leaves are reported but never
+gated.  Leaves with a zero or missing baseline — a new query class, an
+empty-store section — are reported as ``new`` and never gated, so adding
+classes does not require touching the gate.
 
 Baselines are committed from whatever machine last refreshed them while
 CI runs on shared runners, so raw cross-machine ratios would fail every
@@ -46,8 +49,14 @@ import json
 import os
 import sys
 
+# throughput leaves: gated on a drop; latency leaves: gated on growth
+# (machine speed cancels both ways — a slow runner divides throughput and
+# multiplies latency by the same factor)
 GATED_METRICS = ("queries_per_s",)
-REPORTED_METRICS = ("queries_per_s", "rows_per_s")
+GATED_LATENCY_METRICS = ("latency_p99_ms",)
+REPORTED_METRICS = (
+    "queries_per_s", "rows_per_s", "latency_p50_ms", "latency_p99_ms"
+)
 
 
 def _leaves(obj, prefix: str = "") -> dict[str, float]:
@@ -93,11 +102,12 @@ def speed_factor(ratios: list[float]) -> float:
 
 def compare_file(
     name: str, baseline: dict, fresh: dict, threshold: float,
-    factor: float = 1.0,
+    factor: float = 1.0, latency_threshold: float = 0.50,
 ) -> tuple[list[dict], list[str]]:
     """Rows for the delta table plus the failing leaf paths; each gated
     leaf is thresholded on its deviation from the machine-speed
-    ``factor`` the caller divided out."""
+    ``factor`` the caller divided out (latency leaves use the inverse
+    factor: a uniformly slower box multiplies every latency)."""
     base = _leaves(baseline)
     new = _leaves(fresh)
     rows: list[dict] = []
@@ -106,7 +116,10 @@ def compare_file(
         b = base.get(path)
         n = new.get(path)
         metric = path.rsplit("/", 1)[-1]
-        gated = metric in GATED_METRICS
+        latency = metric in GATED_LATENCY_METRICS or metric.startswith(
+            "latency_"
+        )
+        gated = metric in GATED_METRICS or metric in GATED_LATENCY_METRICS
         if n is None:
             status = "gone"
             delta = None
@@ -116,8 +129,14 @@ def compare_file(
         else:
             # deviation from the global median ratio: machine speed
             # cancels, a leaf regressing relative to the rest fails
-            delta = n / (b * factor) - 1.0
-            if gated and delta < -threshold:
+            if latency:
+                # expected latency on this machine is b / factor
+                delta = n * factor / b - 1.0
+                bad = delta > latency_threshold
+            else:
+                delta = n / (b * factor) - 1.0
+                bad = delta < -threshold
+            if gated and bad:
                 status = "REGRESSION"
                 failures.append(f"{name}:{path}")
             else:
@@ -141,9 +160,13 @@ def _fmt(v: float | None) -> str:
     return f"{v:,.0f}" if abs(v) >= 100 else f"{v:,.2f}"
 
 
-def markdown_table(rows: list[dict], threshold: float, factor: float) -> str:
+def markdown_table(
+    rows: list[dict], threshold: float, factor: float,
+    latency_threshold: float = 0.50,
+) -> str:
     lines = [
-        f"### Bench gate (fail below −{threshold:.0%} queries_per_s, "
+        f"### Bench gate (fail below −{threshold:.0%} queries_per_s or "
+        f"above +{latency_threshold:.0%} latency_p99_ms, "
         "median-normalized)",
         "",
         f"machine-speed factor (median new/baseline over gated leaves): "
@@ -174,6 +197,8 @@ def main() -> int:
                     help="where the fresh BENCH_*.json reports were written")
     ap.add_argument("--threshold", type=float, default=0.30,
                     help="max allowed queries_per_s regression (fraction)")
+    ap.add_argument("--latency-threshold", type=float, default=0.50,
+                    help="max allowed latency_p99_ms growth (fraction)")
     ap.add_argument("--commit-msg", default="",
                     help="head commit message; '[bench-skip]' makes the "
                          "gate report-only")
@@ -208,13 +233,16 @@ def main() -> int:
     failures: list[str] = []
     for name, baseline, fresh in pairs:
         rows, fails = compare_file(
-            name, baseline, fresh, args.threshold, factor
+            name, baseline, fresh, args.threshold, factor,
+            args.latency_threshold,
         )
         all_rows.extend(rows)
         failures.extend(fails)
 
     skipped = "[bench-skip]" in args.commit_msg
-    table = markdown_table(all_rows, args.threshold, factor)
+    table = markdown_table(
+        all_rows, args.threshold, factor, args.latency_threshold
+    )
     if failures:
         verdict = (
             "⚠️ regressions present but gate skipped via `[bench-skip]`"

@@ -239,7 +239,8 @@ def bench_kg(json_dir: str = ".") -> None:
     _row(
         f"kg/query-{n}",
         report["wall_s"] / report["n_queries"] * 1e6,
-        f"queries_per_s={report['queries_per_s']:.0f};batch={report['batch']}",
+        f"queries_per_s={report['queries_per_s']:.0f};batch={report['batch']};"
+        f"p99_ms={report['latency_p99_ms']:.3f}",
     )
     _write_json(json_dir, "BENCH_kg.json", report)
 
@@ -247,11 +248,15 @@ def bench_kg(json_dir: str = ".") -> None:
 def bench_serve(json_dir: str = ".") -> None:
     """The ``repro.serve`` pipeline benchmark on the same 100K-row testbed
     store as the ``kg`` section (numbers directly comparable): end-to-end
-    queries/s through the fused jitted executor for point lookups, a
-    3-pattern star BGP, an OPTIONAL+FILTER query, a 2-arm UNION, an
-    ORDER BY DESC, and a GROUP BY-COUNT, each at batch sizes 1/64/4096.
-    Writes ``BENCH_serve.json`` (gated in CI by ``benchmarks/compare.py``
-    against the committed baseline — see ``benchmarks/README.md``)."""
+    queries/s AND per-dispatch latency p50/p99 through the fused jitted
+    executor for point lookups, a 3-pattern star BGP, an OPTIONAL+FILTER
+    query, a 2-arm UNION, an ORDER BY DESC, and a GROUP BY-COUNT, each at
+    batch sizes 1/64/4096.  Writes ``BENCH_serve.json`` (``queries_per_s``
+    and ``latency_p99_ms`` gated in CI by ``benchmarks/compare.py``
+    against the committed baseline — see ``benchmarks/README.md``) plus
+    the run's dispatch trace (``TRACE_serve.json``, Perfetto-loadable)
+    and metrics snapshot (``METRICS_serve.json``) as CI artifacts."""
+    from repro import obs
     from repro.core.executor import create_kg
     from repro.rml import generator
     from repro.serve.bench import bench_serve as run_serve_bench
@@ -262,16 +267,22 @@ def bench_serve(json_dir: str = ".") -> None:
     if tb.parent is not None:
         tables["csv:parent.csv"] = tb.parent
     store = create_kg(tb.doc, tables=tables).to_store()
+    obs.enable_tracing()
     report = run_serve_bench(store)
+    obs.get_tracer().disable()
     report["testbed_rows"] = n
     for name, cls in report["classes"].items():
         for batch, r in cls["batches"].items():
             _row(
                 f"serve/{name}-b{batch}",
                 r["wall_s"] / r["n_queries"] * 1e6,
-                f"queries_per_s={r['queries_per_s']:.0f}",
+                f"queries_per_s={r['queries_per_s']:.0f};"
+                f"p50_ms={r['latency_p50_ms']:.3f};"
+                f"p99_ms={r['latency_p99_ms']:.3f}",
             )
     _write_json(json_dir, "BENCH_serve.json", report)
+    _write_json(json_dir, "TRACE_serve.json", obs.get_tracer().export())
+    _write_json(json_dir, "METRICS_serve.json", obs.get_registry().snapshot())
 
 
 def bench_roofline() -> None:

@@ -25,7 +25,8 @@ python -m repro.launch.rdfize \
     --mapping "$WORK/mapping.ttl" --data-root "$WORK" \
     --out "$WORK/kg.kgz" --emit kgz
 
-python -m repro.launch.serve --kg "$WORK/kg.kgz" --port "$PORT" &
+python -m repro.launch.serve --kg "$WORK/kg.kgz" --port "$PORT" \
+    --trace "$WORK/trace.json" &
 SERVER_PID=$!
 
 QUERY='SELECT * WHERE { ?m <http://repro.org/vocab/gene_name> ?g } LIMIT 3'
@@ -78,3 +79,44 @@ assert sum(ns) == base["n_total"], (sum(ns), base["n_total"])
 print(f"algebra smoke OK: union={union['n_total']} rows, "
       f"{count['n_total']} gene groups summing to {sum(ns)}")
 EOF
+
+# observability over the wire: the metrics op must report a non-empty
+# request-latency histogram and the queue-wait vs execute-time split
+METRICS_OUT="$(python -m repro.launch.serve --connect "127.0.0.1:$PORT" \
+    --metrics --retry-s 30)"
+
+python - "$METRICS_OUT" <<'EOF2'
+import json, sys
+m = json.loads(sys.argv[1])
+hists = m["metrics"]["histograms"]
+counters = m["metrics"]["counters"]
+req = hists["serve.request_ms"]
+assert req["count"] >= 5 and req["p50"] is not None and req["p99"] is not None, req
+# the split: every request recorded a queue wait AND an execute time
+assert hists["serve.queue_wait_ms"]["count"] == req["count"], hists["serve.queue_wait_ms"]
+assert hists["serve.exec_ms"]["count"] >= 1, hists["serve.exec_ms"]
+assert counters["serve.queries"] == req["count"], counters
+# per-signature latency histograms, labeled with example query texts
+sig_hists = [k for k in hists if k.startswith("serve.exec_ms.sig=")]
+assert sig_hists and m["signatures"], (sig_hists, m["signatures"])
+print(f"metrics smoke OK: {req['count']} requests, "
+      f"queue p50={hists['serve.queue_wait_ms']['p50']:.3f}ms, "
+      f"exec p50={hists['serve.exec_ms']['p50']:.3f}ms, "
+      f"{len(sig_hists)} signatures")
+EOF2
+
+# shutdown writes the Chrome trace; assert it is Perfetto-loadable JSON
+# with the queue-wait and dispatch spans of the live batches above
+kill -TERM "$SERVER_PID"
+wait "$SERVER_PID" || true
+python - "$WORK/trace.json" <<'EOF2'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+evs = doc["traceEvents"]
+assert isinstance(evs, list) and evs, "empty trace"
+names = {e["name"] for e in evs}
+assert {"queue_wait", "dispatch"} <= names, names
+for e in evs:
+    assert e["ph"] == "X" and "ts" in e and "dur" in e, e
+print(f"trace smoke OK: {len(evs)} events, spans={sorted(names)}")
+EOF2

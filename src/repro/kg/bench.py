@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.kg.query import match_counts
 from repro.kg.store import TripleStore
+from repro.obs import Histogram
 
 _MASKS = ((1, 1, 0), (0, 1, 1), (1, 0, 0), (0, 0, 1))
 
@@ -48,6 +49,8 @@ def bench_single_pattern(
             "total_matches": 0,
             "wall_s": 0.0,
             "queries_per_s": 0.0,
+            "latency_p50_ms": 0.0,
+            "latency_p99_ms": 0.0,
             "empty_store": True,
         }
     workload = make_workload(store, n_queries, seed)
@@ -55,9 +58,12 @@ def bench_single_pattern(
     total = 0
     for start in range(0, n_queries, batch):
         total += int(match_counts(store, workload[start : start + batch]).sum())
+    lat = Histogram()  # per-dispatch latency -> p50/p99 for the CI gate
     t0 = time.perf_counter()
     for start in range(0, n_queries, batch):
+        d0 = time.perf_counter_ns()
         match_counts(store, workload[start : start + batch])
+        lat.observe((time.perf_counter_ns() - d0) / 1e6)
     dt = time.perf_counter() - t0
     return {
         "n_triples": int(store.n_triples),
@@ -67,4 +73,7 @@ def bench_single_pattern(
         "total_matches": total,
         "wall_s": dt,
         "queries_per_s": n_queries / dt,
+        "latency_p50_ms": lat.percentile(50),
+        "latency_p99_ms": lat.percentile(99),
+        "latency_max_ms": lat.max,
     }

@@ -38,11 +38,17 @@ def main() -> None:
     ap.add_argument("--bench-batch", type=int, default=4096)
     ap.add_argument("--json", default=None,
                     help="also write the bench report to this path")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record a Chrome trace-event JSON of the run "
+                         "(dispatch / redispatch spans; open in Perfetto)")
     args = ap.parse_args()
 
+    from repro import obs
     from repro.kg import persist
     from repro.serve import get_executor, parse_select
 
+    if args.trace:
+        obs.enable_tracing()
     store = persist.open_store(args.kg)
     print(
         f"[query] {store.n_triples} triples, {store.n_terms} terms "
@@ -86,6 +92,11 @@ def main() -> None:
 
     if not args.query and not args.bench:
         ap.error("provide a query (or --bench)")
+
+    if args.trace:
+        n_ev = obs.save_trace(args.trace)
+        print(f"[query] wrote {n_ev}-event trace to {args.trace}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

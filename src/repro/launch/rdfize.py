@@ -38,22 +38,32 @@ def main() -> None:
     ap.add_argument("--emit", default="nt", choices=("nt", "kgz"),
                     help="output format: N-Triples text or a queryable "
                          "repro.kg .kgz snapshot")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record a Chrome trace-event JSON of the run "
+                         "(per-block read/project/encode spans with "
+                         "--stream; open in Perfetto / chrome://tracing)")
     args = ap.parse_args()
 
+    from repro import obs
     from repro.core.executor import create_kg
     from repro.rml import parser
 
-    doc = parser.parse_file(args.mapping)
+    if args.trace:
+        obs.enable_tracing()
+    with obs.span("parse_mapping", cat="rdfize", path=args.mapping):
+        doc = parser.parse_file(args.mapping)
     print(f"[rdfize] {len(doc.triples_maps)} triples maps from {args.mapping}")
-    result = create_kg(
-        doc,
-        data_root=args.data_root,
-        engine=args.engine,
-        join_strategy=args.join,
-        batch_size=args.batch_size,
-        stream=args.stream,
-        block_rows=args.block_rows,
-    )
+    with obs.span("create_kg", cat="rdfize", engine=args.engine,
+                  stream=args.stream):
+        result = create_kg(
+            doc,
+            data_root=args.data_root,
+            engine=args.engine,
+            join_strategy=args.join,
+            batch_size=args.batch_size,
+            stream=args.stream,
+            block_rows=args.block_rows,
+        )
     print(f"[rdfize] {result.n_triples} unique triples in "
           f"{result.wall_time_s:.2f}s ({result.engine} engine)")
     for pred, st in result.stats.items():
@@ -67,13 +77,18 @@ def main() -> None:
         if args.emit == "kgz":
             from repro.kg import persist
 
-            store = result.to_store()
-            persist.save(store, args.out)
+            with obs.span("emit_kgz", cat="rdfize", out=args.out):
+                store = result.to_store()
+                persist.save(store, args.out)
             print(f"[rdfize] wrote {store.n_triples}-triple .kgz snapshot "
                   f"({store.n_terms} terms) to {args.out}")
         else:
-            n = result.write_ntriples(args.out)
+            with obs.span("emit_nt", cat="rdfize", out=args.out):
+                n = result.write_ntriples(args.out)
             print(f"[rdfize] wrote {n} triples to {args.out}")
+    if args.trace:
+        n_ev = obs.save_trace(args.trace)
+        print(f"[rdfize] wrote {n_ev}-event trace to {args.trace}")
 
 
 if __name__ == "__main__":

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import signal
 import sys
 
 
@@ -43,26 +44,39 @@ def main() -> None:
     ap.add_argument("--query", default=None, help="query text (client mode)")
     ap.add_argument("--limit", type=int, default=None,
                     help="max rows decoded per answer (client mode)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="client mode: fetch the server's full metrics "
+                         "snapshot (latency histograms, counters) instead "
+                         "of sending a query")
     ap.add_argument("--retry-s", type=float, default=10.0,
                     help="client mode: keep retrying the connect this long")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="server mode: record queue-wait / dispatch / "
+                         "redispatch spans and write a Chrome trace-event "
+                         "JSON on shutdown (open in Perfetto)")
     args = ap.parse_args()
 
     if args.connect:
-        if not args.query:
-            ap.error("--connect needs --query")
+        if not args.query and not args.metrics:
+            ap.error("--connect needs --query (or --metrics)")
         from repro.serve.client import connect
 
         host, _, port = args.connect.rpartition(":")
         with connect(host or "127.0.0.1", int(port), retry_s=args.retry_s) as c:
-            resp = c.query(args.query, limit=args.limit)
+            resp = c.metrics() if args.metrics else c.query(
+                args.query, limit=args.limit
+            )
         print(json.dumps(resp, indent=2))
         return
 
     if not args.kg:
         ap.error("provide --kg to serve, or --connect/--query for client mode")
+    from repro import obs
     from repro.kg.persist import open_store
     from repro.serve.server import KGServer
 
+    if args.trace:
+        obs.enable_tracing()
     store = open_store(args.kg)
     print(f"[serve] {store.n_triples} triples, {store.n_terms} terms "
           f"from {args.kg}", file=sys.stderr)
@@ -74,15 +88,28 @@ def main() -> None:
         if args.json:
             with open(args.json, "w", encoding="utf-8") as f:
                 json.dump(report, f, indent=2, sort_keys=True)
+        if args.trace:
+            n_ev = obs.save_trace(args.trace)
+            print(f"[serve] wrote {n_ev}-event trace to {args.trace}",
+                  file=sys.stderr)
         return
-    KGServer(
-        store,
-        host=args.host,
-        port=args.port,
-        max_batch=args.max_batch,
-        linger_ms=args.linger_ms,
-        max_rows=args.max_rows,
-    ).serve_forever()
+    # SIGTERM behaves like ^C so a supervised server (CI smoke, systemd)
+    # still flushes its trace on shutdown
+    signal.signal(signal.SIGTERM, signal.default_int_handler)
+    try:
+        KGServer(
+            store,
+            host=args.host,
+            port=args.port,
+            max_batch=args.max_batch,
+            linger_ms=args.linger_ms,
+            max_rows=args.max_rows,
+        ).serve_forever()
+    finally:
+        if args.trace:
+            n_ev = obs.save_trace(args.trace)
+            print(f"[serve] wrote {n_ev}-event trace to {args.trace}",
+                  file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -62,6 +62,13 @@ class Client:
     def stats(self) -> dict:
         return self._roundtrip({"op": "stats"})
 
+    def metrics(self) -> dict:
+        """The server's full metrics snapshot: ``{"metrics": {"counters":
+        ..., "gauges": ..., "histograms": ...}, "signatures": {...}}`` —
+        latency histograms carry ``count``/``sum``/``max``/``p50``/``p90``
+        /``p99`` (see ``repro.obs.metrics``)."""
+        return self._roundtrip({"op": "metrics"})
+
 
 def connect(
     host: str, port: int, retry_s: float = 0.0, timeout: float = 30.0

@@ -34,6 +34,8 @@ bounds) are the only per-query data.  This is the server's hot path.
 from __future__ import annotations
 
 import dataclasses
+import time
+import zlib
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +44,7 @@ import numpy as np
 from repro.core.hashset import next_pow2
 from repro.kg.query import _lex_search
 from repro.kg.store import ORDERS, TripleStore
+from repro.obs import get_registry, get_tracer
 from repro.serve import algebra as A
 from repro.serve import plan as P
 from repro.serve.values import value_table
@@ -49,6 +52,13 @@ from repro.serve.values import value_table
 I32_MAX = np.int32(np.iinfo(np.int32).max)
 UNBOUND = np.int32(-1)
 _MAX_GROW_ROUNDS = 12
+
+
+def plan_label(sig: tuple) -> str:
+    """A short, process-stable label for a plan signature — what dispatch
+    spans and per-signature latency histograms are tagged with (the raw
+    signature tuple is too bulky for a metric name)."""
+    return f"{zlib.crc32(repr(sig).encode('utf-8')) & 0xFFFFFFFF:08x}"
 
 
 # ---------------------------------------------------------------------------
@@ -1039,7 +1049,12 @@ class Executor:
     def _get_compiled(self, plan: P.Plan, caps: dict[str, int], bpad: int):
         key = (plan.sig, tuple(sorted(caps.items())), bpad)
         fn = self._compiled.get(key)
-        if fn is None:
+        if fn is not None:
+            # signature-memo hit: this (plan, capacities, batch-pad) shape
+            # re-dispatches without tracing a new pipeline
+            get_registry().inc("exec.pipeline_cache_hit")
+        else:
+            get_registry().inc("exec.pipeline_cache_miss")
             packed = self.store.device_keys("spo") is not None
             prim_rounds = (
                 {
@@ -1189,7 +1204,13 @@ class Executor:
         fops_j = jnp.asarray(fops)
         qvalid_j = jnp.asarray(qvalid)
         qlimit_j = jnp.asarray(limits)
-        for _ in range(_MAX_GROW_ROUNDS):
+        reg = get_registry()
+        tracer = get_tracer()
+        label = plan_label(plan.sig)
+        reg.inc("exec.batches")
+        reg.inc("exec.queries", bsz)
+        for round_i in range(_MAX_GROW_ROUNDS):
+            t0 = time.perf_counter_ns()
             fn = self._get_compiled(plan, caps, bpad)
             out_cols, n, needed = fn(
                 scan_cols_flat, scan_keys_flat, scan_prim_flat, vt_arrays,
@@ -1203,6 +1224,21 @@ class Executor:
                     caps[k] = next_pow2(want)
                     floors[k] = max(floors.get(k, 0), caps[k])
                     grown = True
+                    # grow-only buffer growth: remembered per signature, so
+                    # a steady workload stops paying this re-dispatch
+                    reg.inc("exec.cap_growth")
+            t1 = time.perf_counter_ns()
+            reg.inc("exec.dispatches")
+            reg.observe("exec.dispatch_ms", (t1 - t0) / 1e6)
+            if round_i > 0:
+                reg.inc("exec.redispatches")
+            if tracer.enabled:
+                tracer.add_complete(
+                    "redispatch" if round_i > 0 else "dispatch",
+                    "exec", t0, t1,
+                    plan=label, batch=bsz, round=round_i,
+                    grown=grown,
+                )
             if not grown:
                 break
         else:

@@ -29,8 +29,22 @@ thread drains the queue (a short linger lets concurrent clients pile up),
 groups in-flight requests by plan *signature* — the structural identity of
 a query with constants abstracted — and executes every group as ONE
 batched device dispatch through the fused ``repro.serve.exec`` pipeline.
-Per-batch latency and queries/s are tracked in :class:`ServerStats` and
-logged to stderr (rate-limited).
+
+Observability: every request's queue-wait and execute time land in
+``repro.obs`` latency histograms (global plus per plan signature), the
+``stats`` op keeps its original flat-counter shape (now read from the
+registry, whose single lock makes the accept/client/dispatch-thread
+updates atomic — the old hand-rolled ``ServerStats`` counters raced), and
+the ``metrics`` op returns the full registry snapshot:
+
+    -> {"op": "metrics"}
+    <- {"id": ..., "metrics": {"counters": ..., "gauges": ...,
+        "histograms": {"serve.queue_wait_ms": {"count": ..., "p50": ...,
+        "p99": ...}, ...}}, "signatures": {"<sig>": "<example query>"}}
+
+With tracing enabled (``--trace`` on ``repro.launch.serve``) each request
+also records ``queue_wait`` / ``dispatch`` / ``redispatch`` spans into the
+Chrome-trace ring buffer.
 """
 
 from __future__ import annotations
@@ -44,37 +58,20 @@ import threading
 import time
 
 from repro.kg.store import TripleStore
+from repro.obs import MetricsRegistry, get_registry, get_tracer
 from repro.serve import algebra
-from repro.serve.exec import Executor, get_executor
+from repro.serve.exec import Executor, get_executor, plan_label
 from repro.serve.values import value_table
-
-
-@dataclasses.dataclass
-class ServerStats:
-    queries: int = 0
-    batches: int = 0
-    errors: int = 0
-    busiest_batch: int = 0
-    total_exec_s: float = 0.0
-
-    def as_dict(self) -> dict:
-        qps = self.queries / self.total_exec_s if self.total_exec_s else 0.0
-        return {
-            "queries": self.queries,
-            "batches": self.batches,
-            "errors": self.errors,
-            "busiest_batch": self.busiest_batch,
-            "mean_batch": self.queries / self.batches if self.batches else 0.0,
-            "exec_queries_per_s": qps,
-        }
 
 
 @dataclasses.dataclass
 class _Pending:
     query: algebra.SelectQuery
+    text: str
     req_id: object
     limit: int | None
     reply: "callable"
+    t_enq_ns: int
 
 
 class KGServer:
@@ -89,6 +86,7 @@ class KGServer:
         linger_ms: float = 2.0,
         max_rows: int = 1000,
         log: bool = True,
+        registry: MetricsRegistry | None = None,
     ):
         self.store = store
         self.executor: Executor = get_executor(store)
@@ -100,7 +98,12 @@ class KGServer:
         self.max_rows = max_rows
         self.linger_s = linger_ms / 1e3
         self.log = log
-        self.stats = ServerStats()
+        # the process-global registry by default (so the `metrics` op also
+        # surfaces executor/stream metrics); tests pass their own
+        self.registry = registry if registry is not None else get_registry()
+        # plan-signature label -> an example query text, so the `metrics`
+        # op's per-signature histograms are interpretable
+        self._sig_examples: dict[str, str] = {}
         self._queue: queue.Queue[_Pending] = queue.Queue()
         self._stop = threading.Event()
         self._threads: list[threading.Thread] = []
@@ -179,13 +182,13 @@ class KGServer:
                 try:
                     req = json.loads(line)
                 except json.JSONDecodeError as e:
-                    self.stats.errors += 1
+                    self.registry.inc("serve.errors")
                     send({"error": f"bad json: {e}"})
                     continue
                 try:
                     self._handle(req, send)
                 except Exception as e:  # noqa: BLE001 — never drop the socket
-                    self.stats.errors += 1
+                    self.registry.inc("serve.errors")
                     rid = req.get("id") if isinstance(req, dict) else None
                     send({"id": rid, "error": f"{type(e).__name__}: {e}"})
         finally:
@@ -194,23 +197,45 @@ class KGServer:
             except OSError:
                 pass
 
+    def stats_dict(self) -> dict:
+        """The ``stats`` op's original flat-counter shape, read from the
+        registry (one lock: the counters are mutually consistent)."""
+        queries = self.registry.counter("serve.queries").value
+        batches = self.registry.counter("serve.batches").value
+        exec_s = self.registry.counter("serve.exec_s").value
+        return {
+            "queries": queries,
+            "batches": batches,
+            "errors": self.registry.counter("serve.errors").value,
+            "busiest_batch": self.registry.gauge("serve.busiest_batch").value,
+            "mean_batch": queries / batches if batches else 0.0,
+            "exec_queries_per_s": queries / exec_s if exec_s else 0.0,
+        }
+
     def _handle(self, req: dict, send) -> None:
         op = req.get("op")
         if op == "ping":
             send({"ok": True, "id": req.get("id")})
             return
         if op == "stats":
-            send({"id": req.get("id"), **self.stats.as_dict()})
+            send({"id": req.get("id"), **self.stats_dict()})
+            return
+        if op == "metrics":
+            send({
+                "id": req.get("id"),
+                "metrics": self.registry.snapshot(),
+                "signatures": dict(self._sig_examples),
+            })
             return
         text = req.get("query")
         if not isinstance(text, str):
-            self.stats.errors += 1
+            self.registry.inc("serve.errors")
             send({"id": req.get("id"), "error": "missing 'query'"})
             return
         try:
             q = algebra.parse_select(text)
         except ValueError as e:
-            self.stats.errors += 1
+            self.registry.inc("serve.errors")
             send({"id": req.get("id"), "error": str(e)})
             return
         if op == "explain":
@@ -221,16 +246,18 @@ class KGServer:
         if limit is not None and (
             not isinstance(limit, int) or isinstance(limit, bool) or limit < 0
         ):
-            self.stats.errors += 1
+            self.registry.inc("serve.errors")
             send({"id": req.get("id"),
                   "error": "'limit' must be a non-negative integer"})
             return
         self._queue.put(
             _Pending(
                 query=q,
+                text=text,
                 req_id=req.get("id"),
                 limit=limit,
                 reply=send,
+                t_enq_ns=time.perf_counter_ns(),
             )
         )
 
@@ -267,21 +294,46 @@ class KGServer:
                 self._run_group(group)
 
     def _run_group(self, group: list[_Pending]) -> None:
-        t0 = time.perf_counter()
+        reg = self.registry
+        tracer = get_tracer()
+        t0_ns = time.perf_counter_ns()
+        # queue wait: enqueue -> dispatch pickup, per request (what batching
+        # linger + a busy dispatcher cost the client, separate from compute)
+        for p in group:
+            reg.observe("serve.queue_wait_ms", (t0_ns - p.t_enq_ns) / 1e6)
+            if tracer.enabled:
+                tracer.add_complete(
+                    "queue_wait", "serve", p.t_enq_ns, t0_ns, req=p.req_id
+                )
         try:
             plan = self.executor.plan(group[0].query)
-            result = self.executor.execute(plan, [p.query for p in group])
+            label = plan_label(plan.sig)
+            if label not in self._sig_examples:
+                self._sig_examples[label] = group[0].text
+            with tracer.span(
+                "dispatch", cat="serve", plan=label, batch=len(group)
+            ):
+                result = self.executor.execute(
+                    plan, [p.query for p in group]
+                )
         except Exception as e:  # noqa: BLE001 — a bad query must not kill serving
-            self.stats.errors += len(group)
+            reg.inc("serve.errors", len(group))
             for p in group:
                 p.reply({"id": p.req_id, "error": f"{type(e).__name__}: {e}"})
             return
-        dt = time.perf_counter() - t0
-        self.stats.queries += len(group)
-        self.stats.batches += 1
-        self.stats.busiest_batch = max(self.stats.busiest_batch, len(group))
-        self.stats.total_exec_s += dt
+        dt = (time.perf_counter_ns() - t0_ns) / 1e9
         lat_ms = dt * 1e3
+        reg.inc("serve.queries", len(group))
+        reg.inc("serve.batches")
+        reg.gauge("serve.busiest_batch").set_max(len(group))
+        reg.inc("serve.exec_s", dt)
+        reg.observe("serve.exec_ms", lat_ms)
+        reg.observe(f"serve.exec_ms.sig={label}", lat_ms)
+        for p in group:
+            # the client-visible request latency: queue wait + execute
+            reg.observe(
+                "serve.request_ms", (time.perf_counter_ns() - p.t_enq_ns) / 1e6
+            )
         for i, p in enumerate(group):
             # decoding runs on the dispatcher thread: cap undeclared row
             # counts so one huge answer cannot stall every other batch
@@ -306,8 +358,8 @@ class KGServer:
             print(
                 f"[serve] batch={len(group)} {lat_ms:.1f}ms "
                 f"({len(group) / dt:.0f} q/s in-batch; "
-                f"totals: {self.stats.queries} queries, "
-                f"{self.stats.batches} batches)",
+                f"totals: {reg.counter('serve.queries').value} queries, "
+                f"{reg.counter('serve.batches').value} batches)",
                 file=sys.stderr,
                 flush=True,
             )

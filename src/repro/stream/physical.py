@@ -7,19 +7,35 @@ stage handed off to a background thread through a bounded queue, so disk I/O
 and parsing overlap the jitted compute of the consumer — the classic
 two-stage pipeline — while the queue bound keeps at most
 ``prefetch + 1`` blocks in flight.
+
+Every stage reports into ``repro.obs``: per-block read / project / encode /
+batch timings (``stream.<stage>_ms`` histograms), rows and bytes per stage
+(``stream.<stage>_rows`` / ``stream.read_bytes`` counters), prefetch queue
+depth (``stream.prefetch_depth`` gauge) and consumer starvation
+(``stream.prefetch_wait_ms``).  With tracing enabled each block also
+records a span, so an ingestion run exports as a flame graph of the
+pipeline.
 """
 
 from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Callable, Iterator
 
+from repro.obs import get_registry, get_tracer
 from repro.stream.block import Block
 from repro.stream.datasource import Datasource
 from repro.stream.logical import Batch, Encode, LogicalOp, MapBlocks, Project, Read
 
 _DONE = object()
+
+
+def _block_nbytes(block: Block) -> int:
+    """Buffer bytes across columns (object columns count pointer width —
+    a cheap, consistent per-stage traffic proxy, not a deep string size)."""
+    return sum(c.nbytes for c in block.columns.values())
 
 
 class _Prefetcher:
@@ -52,12 +68,22 @@ class _Prefetcher:
         return False
 
     def __iter__(self):
+        reg = get_registry()
         try:
             if not self._started:
                 self._started = True
                 self._thread.start()
             while True:
+                t0 = time.perf_counter_ns()
                 is_err, item = self._q.get()
+                # time blocked on the producer: >0 means the consumer
+                # starves (I/O-bound), ~0 means the queue stays full
+                # (compute-bound) — the tuning signal for `prefetch`
+                reg.observe(
+                    "stream.prefetch_wait_ms",
+                    (time.perf_counter_ns() - t0) / 1e6,
+                )
+                reg.gauge("stream.prefetch_depth").set(self._q.qsize())
                 if is_err:
                     raise item
                 if item is _DONE:
@@ -71,25 +97,69 @@ class _Prefetcher:
 
 
 def _read_blocks(source: Datasource) -> Iterator[Block]:
+    reg = get_registry()
+    tracer = get_tracer()
     for task in source.read_tasks():
-        yield from task.read()
+        it = iter(task.read())
+        while True:
+            t0 = time.perf_counter_ns()
+            try:
+                block = next(it)
+            except StopIteration:
+                break
+            t1 = time.perf_counter_ns()
+            reg.observe("stream.read_ms", (t1 - t0) / 1e6)
+            reg.inc("stream.read_blocks")
+            reg.inc("stream.read_rows", block.n_rows)
+            reg.inc("stream.read_bytes", _block_nbytes(block))
+            if tracer.enabled:
+                tracer.add_complete(
+                    "read_block", "stream", t0, t1, rows=block.n_rows
+                )
+            yield block
 
 
-def _fused(fns: list[Callable[[Block], Block]], it: Iterator[Block]) -> Iterator[Block]:
+def _fused(
+    fns: list[tuple[str, Callable[[Block], Block]]], it: Iterator[Block]
+) -> Iterator[Block]:
+    reg = get_registry()
+    tracer = get_tracer()
     for block in it:
-        for fn in fns:
+        for name, fn in fns:
+            t0 = time.perf_counter_ns()
             block = fn(block)
+            t1 = time.perf_counter_ns()
+            reg.observe(f"stream.{name}_ms", (t1 - t0) / 1e6)
+            reg.inc(f"stream.{name}_rows", block.n_rows)
+            if tracer.enabled:
+                tracer.add_complete(
+                    name, "stream", t0, t1, rows=block.n_rows
+                )
         yield block
 
 
 def _rebatch(rows: int, it: Iterator[Block]) -> Iterator[Block]:
+    reg = get_registry()
+
+    def emit(blocks_or_block) -> Block:
+        t0 = time.perf_counter_ns()
+        out = (
+            Block.concat(blocks_or_block)
+            if isinstance(blocks_or_block, list)
+            else blocks_or_block
+        )
+        reg.observe("stream.batch_ms", (time.perf_counter_ns() - t0) / 1e6)
+        reg.inc("stream.batch_blocks")
+        reg.inc("stream.batch_rows", out.n_rows)
+        return out
+
     pending: list[Block] = []
     n = 0
     for block in it:
         if block.n_rows == 0:
             continue
         if not pending and block.n_rows == rows:  # fast path: already sized
-            yield block
+            yield emit(block)
             continue
         pending.append(block)
         n += block.n_rows
@@ -106,21 +176,22 @@ def _rebatch(rows: int, it: Iterator[Block]) -> Iterator[Block]:
                     take.append(b.slice(0, need))
                     acc.append(b.slice(need, b.n_rows))
                     filled = rows
-            yield Block.concat(take) if len(take) > 1 else take[0]
+            yield emit(take if len(take) > 1 else take[0])
             pending = acc
             n -= rows
     if pending:
-        yield Block.concat(pending) if len(pending) > 1 else pending[0]
+        yield emit(pending if len(pending) > 1 else pending[0])
 
 
-def _op_fn(op: LogicalOp) -> Callable[[Block], Block]:
+def _op_fn(op: LogicalOp) -> tuple[str, Callable[[Block], Block]]:
+    """(metric stage name, per-block fn) for a fusable logical op."""
     if isinstance(op, Project):
         cols, fill = op.columns, op.fill
-        return lambda b: b.select(cols, fill)
+        return "project", lambda b: b.select(cols, fill)
     if isinstance(op, MapBlocks):
-        return op.fn
+        return "map", op.fn
     if isinstance(op, Encode):
-        return op.apply
+        return "encode", op.apply
     raise TypeError(f"not a per-block op: {op!r}")
 
 
@@ -131,7 +202,7 @@ def execute(plan: tuple[LogicalOp, ...], prefetch: int = 2) -> Iterator[Block]:
     it: Iterator[Block] = _read_blocks(plan[0].source)
     if prefetch > 0:  # overlap I/O + parsing with downstream compute
         it = iter(_Prefetcher(it, prefetch))
-    fns: list[Callable[[Block], Block]] = []
+    fns: list[tuple[str, Callable[[Block], Block]]] = []
     for op in plan[1:]:
         if isinstance(op, Batch):
             if fns:

@@ -816,3 +816,102 @@ def test_server_wire_protocol_raw_socket():
             assert resp["rows"] == [["<http://ex/s1>", '"hi"']]
     finally:
         srv.stop()
+
+def test_server_metrics_wire_op():
+    """The metrics op returns the registry snapshot: request/queue-wait/
+    exec latency histograms plus per-signature histograms labeled with an
+    example query text."""
+    from repro.obs import MetricsRegistry
+    from repro.serve.client import connect
+    from repro.serve.server import KGServer
+
+    store = _small_store()
+    reg = MetricsRegistry()
+    srv = KGServer(store, port=0, linger_ms=1.0, log=False,
+                   registry=reg).start()
+    try:
+        with connect("127.0.0.1", srv.port, retry_s=5.0) as c:
+            for _ in range(3):
+                c.query("?s <http://ex/p> ?v")
+            c.query("?s <http://ex/q> ?h")
+            m = c.metrics()
+            hists = m["metrics"]["histograms"]
+            counters = m["metrics"]["counters"]
+            assert counters["serve.queries"] == 4
+            assert hists["serve.request_ms"]["count"] == 4
+            assert hists["serve.queue_wait_ms"]["count"] == 4
+            assert hists["serve.exec_ms"]["count"] >= 2
+            assert hists["serve.request_ms"]["p50"] is not None
+            assert hists["serve.request_ms"]["p99"] is not None
+            # two distinct plan signatures, each with an example text
+            sig_hists = {
+                k for k in hists if k.startswith("serve.exec_ms.sig=")
+            }
+            assert len(sig_hists) == 2
+            labels = {k.rsplit("=", 1)[-1] for k in sig_hists}
+            assert labels == set(m["signatures"])
+            assert any(
+                "<http://ex/p>" in v for v in m["signatures"].values()
+            )
+            # the stats op reads the same registry: mutually consistent
+            stats = c.stats()
+            assert stats["queries"] == 4 and stats["errors"] == 0
+    finally:
+        srv.stop()
+
+
+def test_server_concurrent_clients_exact_counts():
+    """Regression for the old unlocked ServerStats: with the accept /
+    client / dispatch threads all mutating counters, totals must still be
+    exact under concurrency (the racy += used to drop increments)."""
+    from repro.obs import MetricsRegistry
+    from repro.serve.client import connect
+    from repro.serve.server import KGServer
+
+    store = _small_store()
+    reg = MetricsRegistry()
+    srv = KGServer(store, port=0, linger_ms=1.0, log=False,
+                   registry=reg).start()
+    n_threads, n_queries = 8, 6
+    queries = ["?s <http://ex/p> ?v", "?s <http://ex/q> ?h", "?s ?p ?o"]
+    errors = []
+    lock = threading.Lock()
+
+    def hit(i: int) -> None:
+        try:
+            with connect("127.0.0.1", srv.port, retry_s=5.0) as c:
+                for j in range(n_queries):
+                    c.query(queries[(i + j) % len(queries)])
+                # one malformed query per client: error counters race too
+                with pytest.raises(RuntimeError):
+                    c.query("SELECT WHERE {")
+        except Exception as e:  # noqa: BLE001 — surface in the main thread
+            with lock:
+                errors.append(e)
+
+    try:
+        threads = [
+            threading.Thread(target=hit, args=(i,)) for i in range(n_threads)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors, errors
+        snap = reg.snapshot()
+        assert snap["counters"]["serve.queries"] == n_threads * n_queries
+        assert snap["counters"]["serve.errors"] == n_threads
+        # per-request histograms observed exactly once per answered query
+        assert (
+            snap["histograms"]["serve.request_ms"]["count"]
+            == n_threads * n_queries
+        )
+        assert (
+            snap["histograms"]["serve.queue_wait_ms"]["count"]
+            == n_threads * n_queries
+        )
+        # batch accounting stays consistent: queries partition into batches
+        assert 1 <= snap["counters"]["serve.batches"] <= n_threads * n_queries
+        assert snap["gauges"]["serve.busiest_batch"] >= 1
+    finally:
+        srv.stop()
