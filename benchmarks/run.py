@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   dedup/*      — dedup_gather traffic/time vs plain gather
   stream/*     — streamed vs eager ingestion (rows/s, peak traced alloc)
   kg/*         — repro.kg store build + batched single-pattern queries/s
+  live/*       — repro.live write path, overlay queries vs delta fraction,
+                 and compaction (writes BENCH_live.json)
   roofline/*   — (when results/dryrun.json exists) the three terms per cell
 
 The ``stream`` and ``kg`` sections also write machine-readable
@@ -285,6 +287,47 @@ def bench_serve(json_dir: str = ".") -> None:
     _write_json(json_dir, "METRICS_serve.json", obs.get_registry().snapshot())
 
 
+def bench_live(json_dir: str = ".") -> None:
+    """The ``repro.live`` mutable-store benchmark on a 20K-row testbed
+    (small enough that the per-level overlay pipelines compile inside the
+    CI budget): insert/delete rows/s through the overlay log, fused
+    ``base ⊕ delta`` query throughput + latency at delta fractions
+    0/1%/10%, and one compaction.  Writes ``BENCH_live.json``
+    (``queries_per_s`` / ``latency_p99_ms`` gated by
+    ``benchmarks/compare.py``)."""
+    from repro.core.executor import create_kg
+    from repro.live.bench import bench_live as run_live_bench
+    from repro.rml import generator
+
+    n = 20_000
+    tb = generator.make_testbed("SOM", n, 0.75, n_poms=2, seed=0)
+    tables = {"csv:child.csv": tb.child}
+    if tb.parent is not None:
+        tables["csv:parent.csv"] = tb.parent
+    store = create_kg(tb.doc, tables=tables).to_store()
+    report = run_live_bench(store)
+    report["testbed_rows"] = n
+    for op in ("insert", "delete"):
+        w = report["write"][op]
+        _row(
+            f"live/{op}", w["wall_s"] / w["rows"] * 1e6,
+            f"rows_per_s={w['rows_per_s']:.0f}",
+        )
+    for label, r in report["query"].items():
+        _row(
+            f"live/query-{label}",
+            r["wall_s"] / r["n_queries"] * 1e6,
+            f"queries_per_s={r['queries_per_s']:.0f};"
+            f"p50_ms={r['latency_p50_ms']:.3f};"
+            f"p99_ms={r['latency_p99_ms']:.3f}",
+        )
+    _row(
+        "live/compact", report["compaction"]["compact_ms"] * 1e3,
+        f"triples={report['compaction']['triples']}",
+    )
+    _write_json(json_dir, "BENCH_live.json", report)
+
+
 def bench_roofline() -> None:
     from benchmarks import roofline
 
@@ -308,7 +351,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     choices=(None, "fig56", "opmodel", "kernels", "dedup",
-                             "stream", "kg", "serve", "roofline"))
+                             "stream", "kg", "serve", "live", "roofline"))
     ap.add_argument("--json-dir", default=".",
                     help="where BENCH_*.json reports are written")
     args = ap.parse_args()
@@ -322,6 +365,7 @@ def main() -> None:
         "stream": lambda: bench_stream(args.json_dir),
         "kg": lambda: bench_kg(args.json_dir),
         "serve": lambda: bench_serve(args.json_dir),
+        "live": lambda: bench_live(args.json_dir),
         "roofline": bench_roofline,
     }
     for name, fn in sections.items():

@@ -271,9 +271,15 @@ def solve(store: TripleStore, patterns: list[TriplePattern]) -> Bindings:
     deterministically sorted by term id.  (Lazy import: ``serve`` layers on
     ``kg``, not the other way around.)"""
     from repro.serve.algebra import SelectQuery
-    from repro.serve.exec import solve_select
+    from repro.serve.exec import get_executor, solve_select
 
-    res = solve_select(store, SelectQuery(patterns=tuple(patterns)))
+    q = SelectQuery(patterns=tuple(patterns))
+    if hasattr(store, "view") and hasattr(store, "base"):
+        # a live store: run over its current base ⊕ delta snapshot
+        ex = get_executor(store.base)
+        res = ex.execute(ex.plan(q), [q], view=store.view())
+    else:
+        res = solve_select(store, q)
     n = int(res.counts[0])
     cols = {
         v: np.asarray(res.cols[v][0, :n], np.int32) for v in res.vars

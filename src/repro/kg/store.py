@@ -66,6 +66,35 @@ def _pack(pat: np.ndarray, val: np.ndarray) -> np.ndarray:
     return (pat.astype(np.int64) << 32) | val.astype(np.int64)
 
 
+def encode_rendered_term(dictionary: Dictionary, term: str) -> tuple[int, int]:
+    """Rendered N-Triples term -> ``(pattern id, value id)`` under the same
+    scheme :meth:`TripleStore.from_ntriples` uses — shared with the live
+    overlay's dictionary append so overlay terms decode/compare exactly
+    like base terms."""
+    from repro.data.terms import unescape_literal
+
+    if term.startswith("<"):
+        kind, body = "iri", term[1:-1]
+    else:
+        kind, body = "lit", unescape_literal(term[1:-1])
+    if "{}" in body:
+        # a literal '{}' would read as a template slot: route the
+        # body through the value side of the (pattern, value) pair
+        if "\x1f" in body:
+            raise ValueError(
+                f"term body mixes '{{}}' and the multi-column "
+                f"separator; not representable: {term!r}"
+            )
+        return (
+            dictionary.encode_scalar(f"{kind}:{{}}"),
+            dictionary.encode_scalar(body),
+        )
+    # slotless pattern: render_term never reads the value id —
+    # point it at the pattern string to stay in range
+    pid = dictionary.encode_scalar(f"{kind}:{body}")
+    return pid, pid
+
+
 @dataclasses.dataclass
 class TripleStore:
     dictionary: Dictionary
@@ -156,7 +185,7 @@ class TripleStore:
         graphs.  Term ids come out as ranks of the canonical rendered term,
         exactly like :meth:`from_kg`, so two stores of the same graph use
         identical ids regardless of how they were built."""
-        from repro.data.terms import canonical_term, unescape_literal
+        from repro.data.terms import canonical_term
 
         canon = sorted(
             {
@@ -169,25 +198,7 @@ class TripleStore:
         term_pat = np.zeros(len(terms), np.int32)
         term_val = np.zeros(len(terms), np.int32)
         for i, term in enumerate(terms):
-            if term.startswith("<"):
-                kind, body = "iri", term[1:-1]
-            else:
-                kind, body = "lit", unescape_literal(term[1:-1])
-            if "{}" in body:
-                # a literal '{}' would read as a template slot: route the
-                # body through the value side of the (pattern, value) pair
-                if "\x1f" in body:
-                    raise ValueError(
-                        f"term body mixes '{{}}' and the multi-column "
-                        f"separator; not representable: {term!r}"
-                    )
-                term_pat[i] = dictionary.encode_scalar(f"{kind}:{{}}")
-                term_val[i] = dictionary.encode_scalar(body)
-            else:
-                # slotless pattern: render_term never reads the value id —
-                # point it at the pattern string to stay in range
-                term_pat[i] = dictionary.encode_scalar(f"{kind}:{body}")
-                term_val[i] = term_pat[i]
+            term_pat[i], term_val[i] = encode_rendered_term(dictionary, term)
         tid = {t: i for i, t in enumerate(terms)}
         cols = np.asarray(
             [[tid[s], tid[p], tid[o]] for s, p, o in canon], np.int32
@@ -308,6 +319,21 @@ class TripleStore:
             cached = max(1, widest.bit_length())
             self._dev[cache_key] = cached
         return cached
+
+    def spo_row(self, s: int, p: int, o: int) -> int | None:
+        """Row id holding the id-triple ``(s, p, o)``, ``None`` when the
+        store does not contain it — a host-side bisect over the sorted SPO
+        index (the live overlay's duplicate/tombstone resolution path)."""
+        idx = self.indexes["spo"]
+        c0, c1, c2 = idx.cols
+        lo = int(np.searchsorted(c0, s, side="left"))
+        hi = int(np.searchsorted(c0, s, side="right"))
+        lo2 = lo + int(np.searchsorted(c1[lo:hi], p, side="left"))
+        hi2 = lo + int(np.searchsorted(c1[lo:hi], p, side="right"))
+        j = lo2 + int(np.searchsorted(c2[lo2:hi2], o, side="left"))
+        if j < hi2 and int(c2[j]) == o:
+            return int(idx.perm[j])
+        return None
 
     # -- term decode / encode ------------------------------------------------
 

@@ -33,6 +33,10 @@ def main() -> None:
     ap.add_argument("--max-rows", type=int, default=1000,
                     help="decoded rows per answer when the request sets no "
                          "limit (n_total always reports the full count)")
+    ap.add_argument("--read-only", action="store_true",
+                    help="serve the snapshot immutably: insert/delete/"
+                         "compact wire ops come back as structured "
+                         "read_only errors instead of mutating")
     ap.add_argument("--bench", action="store_true",
                     help="measure the fused-pipeline query classes over "
                          "--kg and exit (writes the BENCH_serve.json shape; "
@@ -77,7 +81,22 @@ def main() -> None:
 
     if args.trace:
         obs.enable_tracing()
-    store = open_store(args.kg)
+    from repro.kg.persist import KIND_DELTA, load_chain, peek_meta
+    from repro.live.delta import LiveStore
+
+    _, _, _, kind = peek_meta(args.kg)
+    kg_path = None
+    if kind == KIND_DELTA:
+        # a delta snapshot: resolve its parent chain into a live store
+        # (compaction does not rewrite a delta file in place)
+        served = load_chain(args.kg)
+        store = served.base
+    elif args.read_only:
+        served = store = open_store(args.kg)
+    else:
+        store = open_store(args.kg)
+        served = LiveStore(store)
+        kg_path = args.kg
     print(f"[serve] {store.n_triples} triples, {store.n_terms} terms "
           f"from {args.kg}", file=sys.stderr)
     if args.bench:
@@ -98,12 +117,14 @@ def main() -> None:
     signal.signal(signal.SIGTERM, signal.default_int_handler)
     try:
         KGServer(
-            store,
+            served,
             host=args.host,
             port=args.port,
             max_batch=args.max_batch,
             linger_ms=args.linger_ms,
             max_rows=args.max_rows,
+            read_only=args.read_only,
+            kg_path=kg_path,
         ).serve_forever()
     finally:
         if args.trace:

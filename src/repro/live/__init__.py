@@ -1,0 +1,8 @@
+"""``repro.live`` — mutable delta overlays over the immutable TripleStore.
+
+See :mod:`repro.live.delta` for the design.
+"""
+
+from repro.live.delta import LiveStore, OverlayView
+
+__all__ = ["LiveStore", "OverlayView"]

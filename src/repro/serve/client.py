@@ -62,6 +62,28 @@ class Client:
     def stats(self) -> dict:
         return self._roundtrip({"op": "stats"})
 
+    def insert(self, triples) -> dict:
+        """Insert rendered ``(s, p, o)`` term-string triples; the answer
+        reports ``inserted`` / ``n_total`` / ``generation`` (raises on a
+        read-only server)."""
+        return self._roundtrip(
+            {"op": "insert", "triples": [list(t) for t in triples]}
+        )
+
+    def delete(self, triples) -> dict:
+        """Delete triples; the answer reports ``deleted`` (how many were
+        present and removed) and ``tombstoned`` (how many were base rows,
+        now masked until compaction)."""
+        return self._roundtrip(
+            {"op": "delete", "triples": [list(t) for t in triples]}
+        )
+
+    def compact(self) -> dict:
+        """Merge the overlay into a fresh base store; the answer reports
+        ``compact_ms`` and, when the server owns the ``.kgz`` path,
+        ``persisted``."""
+        return self._roundtrip({"op": "compact"})
+
     def metrics(self) -> dict:
         """The server's full metrics snapshot: ``{"metrics": {"counters":
         ..., "gauges": ..., "histograms": ...}, "signatures": {...}}`` —

@@ -247,6 +247,9 @@ class _Lowerer:
         packed: bool,
         prim_rounds: dict[int, int] | None = None,
         order_is_tid: bool = False,
+        overlay: bool = False,
+        delta_cap: int = 1,
+        delta_rounds: int = 1,
     ):
         self.plan = plan
         self.caps = caps
@@ -256,6 +259,13 @@ class _Lowerer:
         self.order_is_tid = order_is_tid
         self.rounds = max(1, int(store_n).bit_length())
         self.prim_rounds = prim_rounds or {}
+        # live-overlay second scan arm (see repro.live.delta.OverlayView):
+        # every reader range-scans the base index AND the re-sorted delta
+        # index, rank-selects non-tombstoned base rows through per-order
+        # alive prefix sums, and emits base matches then delta matches
+        self.overlay = overlay
+        self.delta_cap = delta_cap
+        self.delta_rounds = delta_rounds
         self.scan_index = {s.node_id: i for i, s in enumerate(plan.scans)}
         self.needed: dict[str, jnp.ndarray] = {}
         # the column sequence each node's rows are known to be sorted by
@@ -268,6 +278,10 @@ class _Lowerer:
         self.scan_cols: dict[int, tuple] = {}
         self.scan_keys: dict[int, jnp.ndarray | None] = {}
         self.scan_prim: dict[int, jnp.ndarray | None] = {}
+        self.dscan_cols: dict[int, tuple] = {}
+        self.dscan_keys: dict[int, jnp.ndarray | None] = {}
+        self.alive: dict[int, jnp.ndarray] = {}
+        self.dn = None
         self.vt_arrays: tuple | None = None
         self.consts = None
         self.fops = None
@@ -306,19 +320,66 @@ class _Lowerer:
             primary_q=primary_q if self.packed else None,
             **self._search_args(node),
         )
-        count = jnp.where(self.qvalid, hi - lo, 0)
+        by_pos = {perm3[j]: (c0, c1, c2)[j] for j in range(3)}
+        if self.overlay:
+            # base rows are counted through the alive prefix sums (masking
+            # tombstones), the delta index is range-scanned with the same
+            # bounds, and output rows are base matches then delta matches
+            A = self.alive[node.node_id]
+            nb = A[hi] - A[lo]
+            dc0, dc1, dc2 = self.dscan_cols[node.node_id]
+            dlo, dhi = _range_search(
+                self.dscan_keys[node.node_id], dc0, dc1, dc2,
+                lo_q, hi_q, self.key_bits, self.delta_rounds,
+            )
+            # clamp to the live delta rows: the wildcard upper bound packs
+            # level with the pad rows' sentinel id, so pads fall in range
+            dlo = jnp.minimum(dlo, self.dn)
+            nd = jnp.minimum(dhi, self.dn) - dlo
+            count = jnp.where(self.qvalid, nb + nd, 0)
+        else:
+            count = jnp.where(self.qvalid, hi - lo, 0)
         if not node.out_vars:  # all-constant pattern: pure existence filter
             return {}, jnp.minimum(count, 1)
         self.needed[f"scan{node.node_id}"] = count
         # rows come out in index order: sorted by the variable positions in
-        # the order's (primary, secondary, tertiary) sequence
+        # the order's (primary, secondary, tertiary) sequence — except under
+        # an overlay, where delta matches append after the base run (the
+        # tail determinism sort restores output order)
         var_by_pos = dict(node.var_slots)
-        self._sorted[node.node_id] = tuple(
+        self._sorted[node.node_id] = () if self.overlay else tuple(
             var_by_pos[pos] for pos in perm3 if pos in var_by_pos
         )
+        if self.overlay:
+            j = jnp.arange(cap, dtype=jnp.int32)
+            in_base = j < nb
+            # rank-select the (A[lo]+j)-th live base row: the smallest
+            # sorted position r with alive-prefix A[r+1] past that rank
+            rb = jnp.clip(
+                jnp.searchsorted(
+                    A, A[lo] + j + 1, side="left"
+                ).astype(jnp.int32) - 1,
+                0, self.store_n - 1,
+            )
+            rd = jnp.clip(dlo + (j - nb), 0, self.delta_cap - 1)
+            dby_pos = {perm3[k]: (dc0, dc1, dc2)[k] for k in range(3)}
+
+            def gather(pos):
+                return jnp.where(
+                    in_base, by_pos[pos][rb], dby_pos[pos][rd]
+                )
+
+            valid = j < count
+            cols = {v: gather(pos) for pos, v in node.var_slots}
+            if node.eq_pairs:
+                pat_vals = {pos: gather(pos) for pos in range(3)}
+                for pa, pb in node.eq_pairs:
+                    valid = valid & (pat_vals[pa] == pat_vals[pb])
+                return _compact(cols, valid, cap)[:2]
+            cols = {v: jnp.where(valid, c, UNBOUND) for v, c in cols.items()}
+            return cols, jnp.minimum(count, cap)
         r = jnp.clip(lo + jnp.arange(cap, dtype=jnp.int32), 0, self.store_n - 1)
         valid = jnp.arange(cap) < count
-        by_pos = {perm3[j]: (c0, c1, c2)[j] for j in range(3)}
         cols = {v: by_pos[pos][r] for pos, v in node.var_slots}
         if node.eq_pairs:
             pat_vals = {pos: by_pos[pos][r] for pos in range(3)}
@@ -365,16 +426,36 @@ class _Lowerer:
             primary_q=primary_q if self.packed else None,
             **self._search_args(node),
         )
-        cnt = jnp.where(lvalid, hi - lo, 0)
+        if self.overlay:
+            # merged per-row match count: live base rows (alive-prefix
+            # masked) plus delta rows in the same bounds — the second
+            # range-scan arm, per left row
+            A = self.alive[node.node_id]
+            nb = A[hi] - A[lo]
+            dc0, dc1, dc2 = self.dscan_cols[node.node_id]
+            dlo, dhi = _range_search(
+                self.dscan_keys[node.node_id], dc0, dc1, dc2,
+                lo_q, hi_q, self.key_bits, self.delta_rounds,
+            )
+            dlo = jnp.minimum(dlo, self.dn)
+            nd = jnp.minimum(dhi, self.dn) - dlo
+            cnt = jnp.where(lvalid, nb + nd, 0)
+        else:
+            A = nb = dlo = None
+            cnt = jnp.where(lvalid, hi - lo, 0)
 
         left_sorted = self._sorted.get(node.left.node_id, ())
         # expansion preserves left row order and emits each row's matches
         # in index order, so sortedness extends iff the left rows were
-        # totally ordered (sorted by every left column)
+        # totally ordered (sorted by every left column) — and the index
+        # order claim fails under an overlay (delta matches append after
+        # the base run per left row)
         if set(left_sorted) >= set(node.left.out_vars):
             free_by_pos = dict(node.free_slots)
-            self._sorted[node.node_id] = left_sorted + tuple(
-                free_by_pos[pos] for pos in perm3 if pos in free_by_pos
+            self._sorted[node.node_id] = () if self.overlay else (
+                left_sorted + tuple(
+                    free_by_pos[pos] for pos in perm3 if pos in free_by_pos
+                )
             )
         if node.kind == "left" and node.free_slots:
             # backfill rows append after the matches: order lost
@@ -387,9 +468,20 @@ class _Lowerer:
             return _compact(lcols, lvalid & (cnt > 0), cl)[:2]
 
         by_pos = {perm3[j]: (c0, c1, c2)[j] for j in range(3)}
+        dby_pos = (
+            {
+                perm3[j]: self.dscan_cols[node.node_id][j]
+                for j in range(3)
+            }
+            if self.overlay
+            else None
+        )
         cap = self.caps[f"bindC{node.node_id}"]
         if node.eq_pairs:
-            return self._bind_join_grid(node, lcols, lvalid, lo, cnt, by_pos, cap)
+            return self._bind_join_grid(
+                node, lcols, lvalid, lo, cnt, by_pos, cap,
+                A=A, nb=nb, dlo=dlo, dby_pos=dby_pos,
+            )
         # packed expansion: out row j belongs to the left row whose count
         # prefix-sum passes j (a log-width searchsorted), so matches land
         # directly packed — no (rows x fan-out) grid, no fan-out capacity,
@@ -401,7 +493,19 @@ class _Lowerer:
         rowidx = jnp.searchsorted(cum, j, side="right").astype(jnp.int32)
         rowc = jnp.clip(rowidx, 0, cl - 1)
         prev = jnp.where(rowc > 0, cum[rowc - 1], 0)
-        r = jnp.clip(lo[rowc] + (j - prev), 0, self.store_n - 1)
+        k = j - prev  # match index within this left row's merged run
+        if self.overlay:
+            nb_r = nb[rowc]
+            in_base = k < nb_r
+            rb = jnp.clip(
+                jnp.searchsorted(
+                    A, A[lo[rowc]] + k + 1, side="left"
+                ).astype(jnp.int32) - 1,
+                0, self.store_n - 1,
+            )
+            rd = jnp.clip(dlo[rowc] + (k - nb_r), 0, self.delta_cap - 1)
+        else:
+            r = jnp.clip(lo[rowc] + k, 0, self.store_n - 1)
         valid_out = j < jnp.minimum(total, cap)
         out_vals = {}
         for v in node.out_vars:
@@ -409,7 +513,12 @@ class _Lowerer:
                 vals = lcols[v][rowc]
             else:
                 pos = next(p for p, fv in node.free_slots if fv == v)
-                vals = by_pos[pos][r]
+                if self.overlay:
+                    vals = jnp.where(
+                        in_base, by_pos[pos][rb], dby_pos[pos][rd]
+                    )
+                else:
+                    vals = by_pos[pos][r]
             out_vals[v] = jnp.where(valid_out, vals, UNBOUND)
         if node.kind == "left":
             # backfill: left rows with no match append after the matches,
@@ -426,26 +535,55 @@ class _Lowerer:
         self.needed[f"bindC{node.node_id}"] = total
         return out_vals, jnp.minimum(total, cap)
 
-    def _bind_join_grid(self, node, lcols, lvalid, lo, cnt, by_pos, cap):
+    def _bind_join_grid(
+        self, node, lcols, lvalid, lo, cnt, by_pos, cap,
+        A=None, nb=None, dlo=None, dby_pos=None,
+    ):
         """Grid expansion fallback for patterns with repeated free
         variables: pair validity depends on the gathered values, so the
-        (rows x fan-out) grid plus a compaction pass is unavoidable."""
+        (rows x fan-out) grid plus a compaction pass is unavoidable.
+        Under an overlay the grid covers each row's merged run — the
+        first ``nb`` slots rank-select live base rows, the rest gather
+        from the delta index."""
         cl = lvalid.shape[0]
         m = self.caps[f"bindM{node.node_id}"]
         self.needed[f"bindM{node.node_id}"] = jnp.max(cnt, initial=0)
         offs = jnp.arange(m, dtype=jnp.int32)
-        ridx = jnp.clip(lo[:, None] + offs[None, :], 0, self.store_n - 1)
+        if self.overlay:
+            in_base = offs[None, :] < nb[:, None]
+            rb = jnp.clip(
+                jnp.searchsorted(
+                    A, A[lo][:, None] + offs[None, :] + 1, side="left"
+                ).astype(jnp.int32) - 1,
+                0, self.store_n - 1,
+            )
+            rd = jnp.clip(
+                dlo[:, None] + (offs[None, :] - nb[:, None]),
+                0, self.delta_cap - 1,
+            )
+
+            def grid(pos):
+                return jnp.where(
+                    in_base, by_pos[pos][rb], dby_pos[pos][rd]
+                )
+
+        else:
+            ridx = jnp.clip(lo[:, None] + offs[None, :], 0, self.store_n - 1)
+
+            def grid(pos):
+                return by_pos[pos][ridx]
+
         within = offs[None, :] < cnt[:, None]
         pairmask = within & lvalid[:, None]
         for pa, pb in node.eq_pairs:
-            pairmask = pairmask & (by_pos[pa][ridx] == by_pos[pb][ridx])
+            pairmask = pairmask & (grid(pa) == grid(pb))
         out_vals = {}
         for v in node.out_vars:
             if v in lcols:
                 mat = jnp.broadcast_to(lcols[v][:, None], (cl, m))
             else:
                 pos = next(p for p, fv in node.free_slots if fv == v)
-                mat = by_pos[pos][ridx]
+                mat = grid(pos)
             out_vals[v] = mat.reshape(-1)
         flat_mask = pairmask.reshape(-1)
         if node.kind == "left":
@@ -932,6 +1070,7 @@ class _Lowerer:
 
     def run(
         self, scan_cols_flat, scan_keys_flat, scan_prim_flat,
+        dscan_cols_flat, dscan_keys_flat, alive_flat, dn,
         vt_arrays, consts, fops, qvalid, qlimit,
     ):
         self.scan_cols = {
@@ -946,6 +1085,18 @@ class _Lowerer:
             s.node_id: scan_prim_flat[i] if self.packed else None
             for i, s in enumerate(self.plan.scans)
         }
+        self.dscan_cols = {
+            s.node_id: dscan_cols_flat[3 * i : 3 * i + 3]
+            for i, s in enumerate(self.plan.scans)
+        }
+        self.dscan_keys = {
+            s.node_id: dscan_keys_flat[i] if self.packed else None
+            for i, s in enumerate(self.plan.scans)
+        }
+        self.alive = {
+            s.node_id: alive_flat[i] for i, s in enumerate(self.plan.scans)
+        }
+        self.dn = dn
         self.vt_arrays = vt_arrays
         self.consts = consts
         self.fops = fops
@@ -1046,8 +1197,14 @@ class Executor:
 
     # -- compilation ---------------------------------------------------------
 
-    def _get_compiled(self, plan: P.Plan, caps: dict[str, int], bpad: int):
-        key = (plan.sig, tuple(sorted(caps.items())), bpad)
+    def _get_compiled(
+        self, plan: P.Plan, caps: dict[str, int], bpad: int,
+        ov: tuple[int, bool] | None = None,
+    ):
+        """``ov`` switches on the overlay arm: ``(delta row capacity,
+        delta index packable)`` — part of the cache key, so pure-read
+        pipelines never carry overlay code."""
+        key = (plan.sig, tuple(sorted(caps.items())), bpad, ov)
         fn = self._compiled.get(key)
         if fn is not None:
             # signature-memo hit: this (plan, capacities, batch-pad) shape
@@ -1055,20 +1212,32 @@ class Executor:
             get_registry().inc("exec.pipeline_cache_hit")
         else:
             get_registry().inc("exec.pipeline_cache_miss")
-            packed = self.store.device_keys("spo") is not None
-            prim_rounds = (
-                {
-                    s.node_id: self.store.primary_rounds(s.order)
-                    for s in plan.scans
-                }
-                if packed
-                else None
-            )
+            if self.store.n_triples == 0:
+                # overlay over an empty base: dummy single-row base
+                # operands, every base range comes out empty
+                base_packed = True
+                prim_rounds = {s.node_id: 1 for s in plan.scans}
+            else:
+                base_packed = self.store.device_keys("spo") is not None
+                prim_rounds = (
+                    {
+                        s.node_id: self.store.primary_rounds(s.order)
+                        for s in plan.scans
+                    }
+                    if base_packed
+                    else None
+                )
+            # a combined term table that overflows the packed key fields
+            # forces both arms onto the 3-column lexicographic fallback
+            packed = base_packed and (ov is None or ov[1])
+            if not packed:
+                prim_rounds = None
             order_is_tid = (
                 value_table(self.store).order_is_tid
-                if plan.needs_values
-                else False
+                if plan.needs_values and ov is None
+                else False  # overlay term ids append out of rendered order
             )
+            delta_cap = ov[0] if ov else 1
             lowerer = _Lowerer(
                 plan,
                 caps,
@@ -1077,20 +1246,26 @@ class Executor:
                 packed,
                 prim_rounds,
                 order_is_tid,
+                overlay=ov is not None,
+                delta_cap=delta_cap,
+                delta_rounds=max(1, int(delta_cap).bit_length()),
             )
 
             def single(
                 scan_cols_flat, scan_keys_flat, scan_prim_flat,
+                dscan_cols_flat, dscan_keys_flat, alive_flat, dn,
                 vt_arrays, consts, fops, qvalid, qlimit,
             ):
                 return lowerer.run(
                     scan_cols_flat, scan_keys_flat, scan_prim_flat,
+                    dscan_cols_flat, dscan_keys_flat, alive_flat, dn,
                     vt_arrays, consts, fops, qvalid, qlimit,
                 )
 
             fn = jax.jit(
                 jax.vmap(
-                    single, in_axes=(None, None, None, None, 0, 0, 0, 0)
+                    single,
+                    in_axes=(None,) * 8 + (0, 0, 0, 0),
                 )
             )
             self._compiled[key] = fn
@@ -1099,24 +1274,29 @@ class Executor:
     # -- execution -----------------------------------------------------------
 
     def execute(
-        self, plan: P.Plan, queries: list[A.SelectQuery]
+        self, plan: P.Plan, queries: list[A.SelectQuery], view=None
     ) -> BatchResult:
         """Run signature-equal ``queries`` as one micro-batch: encode each
-        query's constants, then dispatch through
-        :meth:`execute_encoded`."""
-        store = self.store
+        query's constants, then dispatch through :meth:`execute_encoded`.
+        ``view`` (a :class:`repro.live.delta.OverlayView` over this
+        executor's store) answers over ``base ⊕ delta``; an inactive view
+        (empty overlay) takes the pure-read fast path untouched."""
+        act = view is not None and view.active
+        enc = view if act else self.store
         bsz = len(queries)
         consts = np.full((bsz, len(plan.scans), 3), -2, np.int32)
         fops = np.zeros((bsz, max(plan.n_filter_ops, 1)), np.int32)
-        vt = value_table(store) if plan.has_filters else None
+        vt = value_table(enc) if plan.has_filters else None
         for i, q in enumerate(queries):
-            consts[i] = P.encode_scan_consts(store, plan, q)
+            consts[i] = P.encode_scan_consts(enc, plan, q)
             if plan.n_filter_ops:
-                fops[i] = P.encode_filter_ops(store, vt, q.filters)
+                fops[i] = P.encode_filter_ops(enc, vt, q.filters)
         limits = np.asarray(
             [-1 if q.limit is None else q.limit for q in queries], np.int32
         )
-        return self.execute_encoded(plan, consts, fops, limits)
+        return self.execute_encoded(
+            plan, consts, fops, limits, view=view if act else None
+        )
 
     def execute_encoded(
         self,
@@ -1124,16 +1304,19 @@ class Executor:
         consts: np.ndarray,
         fops: np.ndarray | None = None,
         limits: np.ndarray | None = None,
+        view=None,
     ) -> BatchResult:
         """The pre-encoded hot path (the benchmark's unit of work): run a
         ``[B, n_scans, 3]`` int32 constants batch (``-1`` variable slot,
         ``-2`` unknown constant) plus optional ``[B, n_filter_ops]`` filter
         operands, padded to a power-of-two batch, re-dispatching only when
-        a capacity was exceeded."""
+        a capacity was exceeded.  ``view`` (an *active* overlay view whose
+        constants/filter operands were encoded against it) adds the second
+        scan arm; its results decode against the view's combined terms."""
         store = self.store
         out_vars = plan.root.out_vars
         bsz = consts.shape[0]
-        if store.n_triples == 0:
+        if store.n_triples == 0 and view is None:
             if plan.global_agg_alias is not None:
                 # a global COUNT answers one zero row even over nothing
                 lim = (
@@ -1173,22 +1356,52 @@ class Executor:
             )
         qvalid = np.zeros(bpad, bool)
         qvalid[:bsz] = True
-        vt = value_table(store) if plan.needs_values else None
+        enc = view if view is not None else store
+        vt = value_table(enc) if plan.needs_values else None
 
-        scan_cols_flat = tuple(
-            c for s in plan.scans for c in store.device_cols(s.order)
-        )
-        if store.device_keys("spo") is not None:
-            scan_keys_flat = tuple(
-                store.device_keys(s.order) for s in plan.scans
-            )
-            scan_prim_flat = tuple(
-                store.device_primary_starts(s.order) for s in plan.scans
-            )
+        n_scans = len(plan.scans)
+        z = jnp.zeros(1, jnp.int32)
+        if store.n_triples == 0:
+            # empty base under an active overlay: single-row dummies keep
+            # every gather in range; the alive prefix sums (length 1) make
+            # every base range empty
+            scan_cols_flat = (z,) * (3 * n_scans)
+            scan_keys_flat = ((z, z),) * n_scans
+            scan_prim_flat = (z,) * n_scans
         else:
-            z = jnp.zeros(1, jnp.int32)
-            scan_keys_flat = ((z, z),) * len(plan.scans)
-            scan_prim_flat = (z,) * len(plan.scans)
+            scan_cols_flat = tuple(
+                c for s in plan.scans for c in store.device_cols(s.order)
+            )
+            if store.device_keys("spo") is not None:
+                scan_keys_flat = tuple(
+                    store.device_keys(s.order) for s in plan.scans
+                )
+                scan_prim_flat = tuple(
+                    store.device_primary_starts(s.order) for s in plan.scans
+                )
+            else:
+                scan_keys_flat = ((z, z),) * n_scans
+                scan_prim_flat = (z,) * n_scans
+        if view is not None:
+            ov_packed = view.delta.device_keys("spo") is not None
+            ov = (view.delta.n_triples, ov_packed)
+            dscan_cols_flat = tuple(
+                c for s in plan.scans for c in view.delta.device_cols(s.order)
+            )
+            if ov_packed:
+                dscan_keys_flat = tuple(
+                    view.delta.device_keys(s.order) for s in plan.scans
+                )
+            else:
+                dscan_keys_flat = ((z, z),) * n_scans
+            alive_flat = tuple(view.alive(s.order) for s in plan.scans)
+            dn_j = jnp.asarray(view.n_delta, jnp.int32)
+        else:
+            ov = None
+            dscan_cols_flat = (z,) * (3 * n_scans)
+            dscan_keys_flat = ((z, z),) * n_scans
+            alive_flat = (z,) * n_scans
+            dn_j = jnp.asarray(0, jnp.int32)
         if plan.needs_values:
             vt_arrays = (
                 vt.is_lit, vt.is_num, vt.str_rank, vt.num_rank, vt.order_rank
@@ -1211,10 +1424,11 @@ class Executor:
         reg.inc("exec.queries", bsz)
         for round_i in range(_MAX_GROW_ROUNDS):
             t0 = time.perf_counter_ns()
-            fn = self._get_compiled(plan, caps, bpad)
+            fn = self._get_compiled(plan, caps, bpad, ov)
             out_cols, n, needed = fn(
-                scan_cols_flat, scan_keys_flat, scan_prim_flat, vt_arrays,
-                consts_j, fops_j, qvalid_j, qlimit_j,
+                scan_cols_flat, scan_keys_flat, scan_prim_flat,
+                dscan_cols_flat, dscan_keys_flat, alive_flat, dn_j,
+                vt_arrays, consts_j, fops_j, qvalid_j, qlimit_j,
             )
             self.dispatches += 1
             grown = False
@@ -1252,7 +1466,7 @@ class Executor:
             for v, c in zip(out_vars, out_cols)
         } if out_cols else {}
         return BatchResult(
-            store=store, vars=out_vars, cols=cols, counts=counts,
+            store=enc, vars=out_vars, cols=cols, counts=counts,
             agg_vars=plan.agg_vars,
         )
 

@@ -29,6 +29,9 @@ from repro.serve.values import parse_number
 
 
 def _decoded_triples(store: TripleStore) -> list[tuple[str, str, str]]:
+    rt = getattr(store, "rendered_triples", None)
+    if rt is not None:  # a LiveStore: its surviving base ⊕ delta triples
+        return list(rt())
     return [
         (
             store.decode_term(int(store.s[i])),

@@ -844,7 +844,11 @@ def encode_scan_consts(
 ) -> np.ndarray:
     """Per-query constant term ids, one (s, p, o) row per plan scan: ``-1``
     marks a variable slot, ``-2`` a constant the store has never seen (its
-    range scan comes back empty)."""
+    range scan comes back empty).  ``store`` may be any store-like object
+    with ``term_id`` — in particular a live ``OverlayView``, whose combined
+    term table resolves overlay-only constants (planning itself always
+    runs on the base store; the executor's capacity feedback absorbs the
+    delta rows the estimates never saw)."""
     flat = q.all_patterns()
     out = np.full((len(plan.scans), 3), -1, np.int32)
     for i, scan in enumerate(plan.scans):

@@ -21,6 +21,18 @@ object per line, one response line per request, ``id`` echoed back):
     -> {"op": "stats"}                             <- running counters
     -> {"op": "explain", "query": "..."}           <- the planned operator tree
 
+Mutation ops (served stores wrapped in a :class:`repro.live.delta.LiveStore`;
+rejected with ``"code": "read_only"`` on a read-only or plain store):
+
+    -> {"id": 4, "op": "insert", "triples": [["<s>", "<p>", "\"o\""]]}
+    <- {"id": 4, "inserted": 1, "n_total": 101, "generation": 3,
+        "delta_fraction": 0.01}
+    -> {"id": 5, "op": "delete", "triples": [["<s>", "<p>", "\"o\""]]}
+    <- {"id": 5, "deleted": 1, "tombstoned": 0, ...}
+    -> {"id": 6, "op": "compact"}
+    <- {"id": 6, "compacted": true, "compact_ms": 12.3, "persisted": true,
+        "n_total": 100, "generation": 4}
+
 Errors come back as ``{"id": ..., "error": "..."}``; ``rows`` hold rendered
 N-Triples terms with ``null`` for unbound (OPTIONAL-miss) variables.
 
@@ -29,6 +41,14 @@ thread drains the queue (a short linger lets concurrent clients pile up),
 groups in-flight requests by plan *signature* — the structural identity of
 a query with constants abstracted — and executes every group as ONE
 batched device dispatch through the fused ``repro.serve.exec`` pipeline.
+
+Mutations serialize on the same dispatcher thread, between query groups:
+each query group captures one copy-on-write overlay snapshot
+(``LiveStore.view()``) before dispatch, so an in-flight micro-batch never
+observes a half-applied mutation; requests that arrived before a mutation
+execute against the pre-mutation snapshot.  ``compact`` swaps in the
+rebuilt base store (and rewrites the served ``.kgz`` in place when the
+server owns a path).
 
 Observability: every request's queue-wait and execute time land in
 ``repro.obs`` latency histograms (global plus per plan signature), the
@@ -58,6 +78,7 @@ import threading
 import time
 
 from repro.kg.store import TripleStore
+from repro.live.delta import LiveStore
 from repro.obs import MetricsRegistry, get_registry, get_tracer
 from repro.serve import algebra
 from repro.serve.exec import Executor, get_executor, plan_label
@@ -66,20 +87,23 @@ from repro.serve.values import value_table
 
 @dataclasses.dataclass
 class _Pending:
-    query: algebra.SelectQuery
+    query: algebra.SelectQuery | None
     text: str
     req_id: object
     limit: int | None
     reply: "callable"
     t_enq_ns: int
+    op: str = "query"
+    triples: list | None = None
 
 
 class KGServer:
-    """Serve one immutable store; see the module docstring for protocol."""
+    """Serve one store — immutable, or mutable when wrapped in a
+    :class:`LiveStore`; see the module docstring for protocol."""
 
     def __init__(
         self,
-        store: TripleStore,
+        store: TripleStore | LiveStore,
         host: str = "127.0.0.1",
         port: int = 0,
         max_batch: int = 4096,
@@ -87,8 +111,17 @@ class KGServer:
         max_rows: int = 1000,
         log: bool = True,
         registry: MetricsRegistry | None = None,
+        read_only: bool = False,
+        kg_path: str | None = None,
     ):
+        if isinstance(store, LiveStore):
+            self.live: LiveStore | None = store
+            store = store.base
+        else:
+            self.live = None
         self.store = store
+        self.read_only = read_only or self.live is None
+        self.kg_path = kg_path  # compact rewrites this .kgz in place
         self.executor: Executor = get_executor(store)
         # build the value-typed rank side tables (FILTER / ORDER BY keys)
         # on device now, at server store-load time, so no client ever pays
@@ -122,9 +155,11 @@ class KGServer:
             t.start()
             self._threads.append(t)
         if self.log:
+            src = self.live if self.live is not None else self.store
+            mode = "read-only" if self.read_only else "live"
             print(
-                f"[serve] listening on {self.host}:{self.port} — "
-                f"{self.store.n_triples} triples, {self.store.n_terms} terms",
+                f"[serve] listening on {self.host}:{self.port} ({mode}) — "
+                f"{src.n_triples} triples, {src.n_terms} terms",
                 file=sys.stderr,
                 flush=True,
             )
@@ -227,6 +262,9 @@ class KGServer:
                 "signatures": dict(self._sig_examples),
             })
             return
+        if op in ("insert", "delete", "compact"):
+            self._enqueue_mutation(op, req, send)
+            return
         text = req.get("query")
         if not isinstance(text, str):
             self.registry.inc("serve.errors")
@@ -261,6 +299,53 @@ class KGServer:
             )
         )
 
+    def _enqueue_mutation(self, op: str, req: dict, send) -> None:
+        """Validate a mutation request on the connection thread; apply it
+        on the dispatcher thread (one writer, serialized with queries)."""
+        if self.read_only:
+            # structured rejection — a read-only server keeps serving
+            # queries, it never crashes the dispatch thread on a write
+            self.registry.inc("serve.errors")
+            self.registry.inc("live.rejected")
+            send({
+                "id": req.get("id"),
+                "error": "store is read-only: mutation rejected",
+                "code": "read_only",
+            })
+            return
+        triples = None
+        if op in ("insert", "delete"):
+            triples = req.get("triples")
+            if (
+                not isinstance(triples, list)
+                or not triples
+                or not all(
+                    isinstance(t, list)
+                    and len(t) == 3
+                    and all(isinstance(x, str) for x in t)
+                    for t in triples
+                )
+            ):
+                self.registry.inc("serve.errors")
+                send({
+                    "id": req.get("id"),
+                    "error": "'triples' must be a non-empty list of "
+                             "[s, p, o] term-string triples",
+                })
+                return
+        self._queue.put(
+            _Pending(
+                query=None,
+                text="",
+                req_id=req.get("id"),
+                limit=None,
+                reply=send,
+                t_enq_ns=time.perf_counter_ns(),
+                op=op,
+                triples=triples,
+            )
+        )
+
     # -- the micro-batching dispatcher ----------------------------------------
 
     def _drain(self) -> list[_Pending]:
@@ -287,11 +372,82 @@ class KGServer:
             batch = self._drain()
             if not batch:
                 continue
-            groups: dict[tuple, list[_Pending]] = {}
+            # queries batch freely between mutations, but a mutation is an
+            # ordering barrier: everything enqueued before it executes
+            # against the pre-mutation snapshot, everything after sees it
+            queries: list[_Pending] = []
             for p in batch:
-                groups.setdefault(p.query.signature(), []).append(p)
-            for group in groups.values():
-                self._run_group(group)
+                if p.op == "query":
+                    queries.append(p)
+                    continue
+                self._flush_queries(queries)
+                queries = []
+                self._apply_mutation(p)
+            self._flush_queries(queries)
+
+    def _flush_queries(self, pending: list[_Pending]) -> None:
+        if not pending:
+            return
+        groups: dict[tuple, list[_Pending]] = {}
+        for p in pending:
+            groups.setdefault(p.query.signature(), []).append(p)
+        for group in groups.values():
+            self._run_group(group)
+
+    def _apply_mutation(self, p: _Pending) -> None:
+        """Apply one insert/delete/compact on the dispatcher thread.  The
+        overlay mutates copy-on-write: query groups snapshot a view before
+        dispatch, so nothing in flight sees a half-applied change."""
+        live = self.live
+        reg = self.registry
+        try:
+            if p.op == "insert":
+                added = live.insert([tuple(t) for t in p.triples])
+                reg.inc("live.inserts", added)
+                reply = {"id": p.req_id, "inserted": added}
+            elif p.op == "delete":
+                deleted, tombstoned = live.delete(
+                    [tuple(t) for t in p.triples]
+                )
+                reg.inc("live.deletes", deleted)
+                reg.inc("live.tombstone_hits", tombstoned)
+                reply = {
+                    "id": p.req_id,
+                    "deleted": deleted,
+                    "tombstoned": tombstoned,
+                }
+            else:  # compact
+                t0 = time.perf_counter_ns()
+                new_base = live.compact()
+                # swap the served base copy-on-write: executor and value
+                # tables rebuild against the new store before any later
+                # query group runs
+                self.store = new_base
+                self.executor = get_executor(new_base)
+                value_table(new_base)
+                compact_ms = (time.perf_counter_ns() - t0) / 1e6
+                reg.inc("live.compactions")
+                reg.observe("live.compact_ms", compact_ms)
+                reply = {
+                    "id": p.req_id,
+                    "compacted": True,
+                    "compact_ms": round(compact_ms, 3),
+                }
+                if self.kg_path is not None:
+                    from repro.kg import persist
+
+                    persist.save(
+                        new_base, self.kg_path, generation=live.generation
+                    )
+                    reply["persisted"] = True
+            reg.gauge("live.delta_fraction").set(live.delta_fraction)
+            reply["n_total"] = live.n_triples
+            reply["generation"] = live.generation
+            reply["delta_fraction"] = round(live.delta_fraction, 6)
+            p.reply(reply)
+        except Exception as e:  # noqa: BLE001 — a bad write must not kill serving
+            reg.inc("serve.errors")
+            p.reply({"id": p.req_id, "error": f"{type(e).__name__}: {e}"})
 
     def _run_group(self, group: list[_Pending]) -> None:
         reg = self.registry
@@ -310,11 +466,14 @@ class KGServer:
             label = plan_label(plan.sig)
             if label not in self._sig_examples:
                 self._sig_examples[label] = group[0].text
+            # snapshot the overlay (copy-on-write): this group answers over
+            # exactly the mutations applied before it, whatever lands next
+            view = self.live.view() if self.live is not None else None
             with tracer.span(
                 "dispatch", cat="serve", plan=label, batch=len(group)
             ):
                 result = self.executor.execute(
-                    plan, [p.query for p in group]
+                    plan, [p.query for p in group], view=view
                 )
         except Exception as e:  # noqa: BLE001 — a bad query must not kill serving
             reg.inc("serve.errors", len(group))

@@ -1,0 +1,454 @@
+"""repro.live: delta-overlay semantics vs a naive set oracle (property
+tests over random insert/delete/compact interleavings), fused overlay
+queries vs the full-algebra oracle, post-compaction byte-identity across
+eager / streamed / kgz-chain stores, delta snapshot lineage, the
+generation-keyed ``open_store`` cache, and the live wire ops."""
+
+import os
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # test image without hypothesis: seeded-example fallback
+    from _hypothesis_shim import given, settings, st
+
+from repro.core.executor import create_kg
+from repro.data.terms import canonical_term
+from repro.kg import persist, solve, parse_bgp
+from repro.kg.store import TripleStore
+from repro.live import LiveStore
+from repro.obs import MetricsRegistry
+from repro.rml import generator
+from repro.serve import oracle_select, parse_select
+from repro.serve.client import connect
+from repro.serve.server import KGServer
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+SUBS = [f"<http://ex/s{i}>" for i in range(5)]
+PREDS = [f"<http://ex/p{i}>" for i in range(3)]
+LITS = ['"1"', '"2"', '"10"', '"2.5"', '"-3"', '"abc"', '"b c"', '""']
+OBJS = SUBS[:2] + LITS
+# terms the base graph can never contain: inserts through these exercise
+# the overlay term table (ids past the base's)
+NEW_SUBS = [f"<http://ex/new{i}>" for i in range(3)]
+NEW_LITS = ['"zz9"', '"7.5"']
+
+TEMPLATES = [
+    "SELECT ?s ?p ?o WHERE { ?s ?p ?o }",
+    "SELECT ?s ?o WHERE { ?s <http://ex/p0> ?o }",
+    "SELECT ?s ?o ?t WHERE { ?s <http://ex/p0> ?o . ?s <http://ex/p1> ?t }",
+    "SELECT ?s ?o ?t WHERE { ?s <http://ex/p0> ?o "
+    "OPTIONAL { ?s <http://ex/p2> ?t } }",
+    "SELECT ?s ?o WHERE { { ?s <http://ex/p0> ?o } UNION "
+    "{ ?s <http://ex/p1> ?o } }",
+    "SELECT ?s (COUNT(*) AS ?n) WHERE { ?s ?p ?o } GROUP BY ?s",
+    "SELECT DISTINCT ?s WHERE { ?s ?p ?o }",
+    'SELECT ?s WHERE { ?s <http://ex/p0> ?o FILTER(?o >= 2) }',
+]
+
+
+def rand_base(rng, n_triples: int) -> list:
+    triples = {
+        (
+            SUBS[rng.integers(0, len(SUBS))],
+            PREDS[rng.integers(0, len(PREDS))],
+            OBJS[rng.integers(0, len(OBJS))],
+        )
+        for _ in range(n_triples)
+    }
+    return sorted(triples)
+
+
+def rand_triple(rng, model):
+    """A triple to mutate with: half the time one that exists (so deletes
+    hit), else a fresh draw over the widened (overlay-term) universe."""
+    if model and rng.integers(0, 2) == 0:
+        return sorted(model)[int(rng.integers(0, len(model)))]
+    return (
+        (SUBS + NEW_SUBS)[rng.integers(0, len(SUBS) + len(NEW_SUBS))],
+        PREDS[rng.integers(0, len(PREDS))],
+        (OBJS + NEW_LITS)[rng.integers(0, len(OBJS) + len(NEW_LITS))],
+    )
+
+
+def rand_ops(rng, model, n_ops: int):
+    """Random (op, triples) interleaving; ``model`` (a set of canonical
+    triples — the naive oracle) is updated alongside."""
+    ops = []
+    for _ in range(n_ops):
+        kind = ("insert", "insert", "delete", "delete", "compact")[
+            int(rng.integers(0, 5))
+        ]
+        if kind == "compact":
+            ops.append(("compact", None))
+            continue
+        trips = [rand_triple(rng, model) for _ in range(rng.integers(1, 4))]
+        ops.append((kind, trips))
+        for t in trips:
+            ct = tuple(canonical_term(x) for x in t)
+            (model.add if kind == "insert" else model.discard)(ct)
+    return ops
+
+
+def apply_ops(live: LiveStore, ops) -> None:
+    for kind, trips in ops:
+        if kind == "insert":
+            live.insert(trips)
+        elif kind == "delete":
+            live.delete(trips)
+        else:
+            live.compact()
+
+
+def row_key(row):
+    # overlay term ids are not rendered-order ranks, so pre-compaction
+    # engine row order differs from the oracle's: compare as multisets
+    return tuple((v is None, isinstance(v, int), str(v)) for v in row)
+
+
+def as_multiset(rows):
+    out = {}
+    for r in rows:
+        k = row_key(r)
+        out[k] = out.get(k, 0) + 1
+    return out
+
+
+def check_queries(live: LiveStore) -> None:
+    for qtext in TEMPLATES:
+        q = parse_select(qtext)
+        got = live.solve(q).rows(0)
+        want = oracle_select(live, q)
+        assert as_multiset(got) == as_multiset(want), (
+            f"{qtext}\n got: {got}\nwant: {want}"
+        )
+        again = live.solve(q).rows(0)
+        assert got == again, f"nondeterministic answer for {qtext}"
+
+
+# --------------------------------------------------------------------------
+# property tests: random interleavings vs the naive set oracle
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_live_matches_oracle(seed):
+    rng = np.random.default_rng(seed)
+    base_trips = rand_base(rng, int(rng.integers(0, 25)))
+    live = LiveStore(TripleStore.from_ntriples(base_trips))
+    model = {tuple(canonical_term(x) for x in t) for t in base_trips}
+    ops = rand_ops(rng, model, n_ops=int(rng.integers(1, 7)))
+    apply_ops(live, ops)
+    # the set oracle: the live triple set is exactly the model set
+    assert set(live.rendered_triples()) == model
+    assert live.n_triples == len(model)
+    check_queries(live)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_compaction_byte_identity(seed):
+    """A compacted store is byte-identical (via the deterministic snapshot
+    writer) to a from-scratch build of the same triple set."""
+    import tempfile
+
+    rng = np.random.default_rng(seed + 77)
+    base_trips = rand_base(rng, int(rng.integers(1, 25)))
+    live = LiveStore(TripleStore.from_ntriples(base_trips))
+    model = {tuple(canonical_term(x) for x in t) for t in base_trips}
+    apply_ops(live, rand_ops(rng, model, n_ops=int(rng.integers(1, 6))))
+    compacted = live.compact()
+    rebuilt = TripleStore.from_ntriples(sorted(model))
+    with tempfile.TemporaryDirectory() as td:
+        pa, pb = os.path.join(td, "a.kgz"), os.path.join(td, "b.kgz")
+        persist.save(compacted, pa, generation=7)
+        persist.save(rebuilt, pb, generation=7)
+        with open(pa, "rb") as f:
+            ba = f.read()
+        with open(pb, "rb") as f:
+            bb = f.read()
+    assert ba == bb
+    # post-compaction ids are canonical: answers match the oracle exactly,
+    # including row order
+    for qtext in TEMPLATES:
+        q = parse_select(qtext)
+        assert live.solve(q).rows(0) == oracle_select(live, q)
+
+
+# --------------------------------------------------------------------------
+# byte-identity across store construction paths
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_compaction_identical_across_builds(tmp_path):
+    """The same mutation sequence over an eager-built, a streamed, and a
+    kgz-chain-loaded store compacts to byte-identical snapshots."""
+    tb = generator.make_testbed("SOM", 40, 0.5, n_poms=2, seed=3)
+    tables = {"csv:child.csv": tb.child}
+    if tb.parent is not None:
+        tables["csv:parent.csv"] = tb.parent
+    eager = create_kg(tb.doc, tables=tables).to_store()
+    streamed = create_kg(
+        tb.doc, tables=tables, stream=True, block_rows=16
+    ).to_store()
+
+    rng = np.random.default_rng(5)
+    model = set(
+        LiveStore(eager).rendered_triples()
+    )  # same graph for all three
+    ops = rand_ops(rng, model, n_ops=5)
+
+    base_path = str(tmp_path / "base.kgz")
+    persist.save(eager, base_path)
+    lives = {
+        "eager": LiveStore(eager),
+        "streamed": LiveStore(streamed),
+    }
+    # kgz chain: apply ops to a fresh live store over the saved base,
+    # snapshot the net overlay, and resolve it back through load_chain
+    chain_src = LiveStore(persist.open_store(base_path))
+    mut_only = [op for op in ops if op[0] != "compact"]
+    apply_ops(chain_src, mut_only)
+    delta_path = str(tmp_path / "delta.kgz")
+    persist.save_delta(chain_src, delta_path, "base.kgz")
+    chain = persist.load_chain(delta_path)
+    for op_kind, _ in ops:
+        if op_kind == "compact":
+            chain.compact()
+    lives["chain"] = chain
+
+    blobs = {}
+    for name, lv in lives.items():
+        if name != "chain":
+            apply_ops(lv, ops)
+        assert set(lv.rendered_triples()) == model, name
+        compacted = lv.compact()
+        path = str(tmp_path / f"{name}.kgz")
+        persist.save(compacted, path, generation=9)
+        with open(path, "rb") as f:
+            blobs[name] = f.read()
+    assert blobs["eager"] == blobs["streamed"] == blobs["chain"]
+
+
+# --------------------------------------------------------------------------
+# delta snapshots / lineage
+# --------------------------------------------------------------------------
+
+
+def _tiny_live():
+    base = TripleStore.from_ntriples(
+        [
+            ("<http://ex/s0>", "<http://ex/p0>", '"1"'),
+            ("<http://ex/s1>", "<http://ex/p0>", '"2"'),
+        ]
+    )
+    return LiveStore(base)
+
+
+def test_delta_snapshot_roundtrip(tmp_path):
+    live = _tiny_live()
+    base_path = str(tmp_path / "base.kgz")
+    persist.save(live.base, base_path)
+    live.insert([("<http://ex/new0>", "<http://ex/p1>", '"9"')])
+    live.delete([("<http://ex/s1>", "<http://ex/p0>", '"2"')])
+    delta_path = str(tmp_path / "delta.kgz")
+    persist.save_delta(live, delta_path, "base.kgz")
+    version, n_ins, gen, kind = persist.peek_meta(delta_path)
+    assert (version, n_ins, kind) == (persist.FORMAT_VERSION, 1, 1)
+    assert gen == live.generation
+    loaded = persist.load_chain(delta_path)
+    assert set(loaded.rendered_triples()) == set(live.rendered_triples())
+    assert loaded.generation == live.generation
+    # load() must refuse a delta file (load_chain is the resolver)
+    with pytest.raises(ValueError, match="delta snapshot"):
+        persist.load(delta_path)
+    # a full snapshot load_chains to an empty-overlay live store
+    full = persist.load_chain(base_path)
+    assert full.n_delta == 0 and full.n_tombstones == 0
+
+
+def test_delta_snapshot_lineage_mismatch(tmp_path):
+    live = _tiny_live()
+    persist.save(live.base, str(tmp_path / "base.kgz"))
+    live.insert([("<http://ex/new0>", "<http://ex/p1>", '"9"')])
+    delta_path = str(tmp_path / "delta.kgz")
+    persist.save_delta(live, delta_path, "base.kgz")
+    # overwrite the parent with a different graph: the recorded parent
+    # snapshot id no longer matches
+    other = TripleStore.from_ntriples(
+        [("<http://ex/sX>", "<http://ex/p0>", '"1"')]
+    )
+    persist.save(other, str(tmp_path / "base.kgz"))
+    with pytest.raises(ValueError, match="snapshot id mismatch"):
+        persist.load_chain(delta_path)
+
+
+def test_save_delta_requires_saved_parent():
+    live = _tiny_live()  # base never saved: no snapshot id
+    live.insert([("<http://ex/new0>", "<http://ex/p1>", '"9"')])
+    with pytest.raises(ValueError, match="snapshot id"):
+        persist.save_delta(live, "/tmp/never-written.kgz", "base.kgz")
+
+
+# --------------------------------------------------------------------------
+# open_store cache: generation key (same-second same-size rewrite)
+# --------------------------------------------------------------------------
+
+
+def test_open_store_same_size_same_mtime_rewrite(tmp_path):
+    """Compaction rewrites a .kgz in place; if the rewrite lands in the
+    same mtime tick with the same byte size, the (mtime, size) cache key
+    collides — the generation component must still force a reload."""
+    path = str(tmp_path / "kg.kgz")
+    a = TripleStore.from_ntriples([("<http://x/a>", "<http://x/p>", '"1"')])
+    b = TripleStore.from_ntriples([("<http://x/b>", "<http://x/p>", '"1"')])
+    persist.save(a, path, generation=0)
+    st0 = os.stat(path)
+    first = persist.open_store(path)
+    assert first.decode_term(int(first.s[0])) == "<http://x/a>"
+    persist.save(b, path, generation=1)
+    # force the mtime collision the bug needs (FS mtime granularity can be
+    # coarse enough to produce it naturally)
+    os.utime(path, ns=(st0.st_atime_ns, st0.st_mtime_ns))
+    st1 = os.stat(path)
+    assert st1.st_size == st0.st_size  # premise: same-size rewrite
+    assert st1.st_mtime_ns == st0.st_mtime_ns  # premise: same-tick rewrite
+    second = persist.open_store(path)
+    assert second is not first
+    assert second.decode_term(int(second.s[0])) == "<http://x/b>"
+
+
+# --------------------------------------------------------------------------
+# edge semantics
+# --------------------------------------------------------------------------
+
+
+def test_empty_base_overlay():
+    live = LiveStore(TripleStore.from_ntriples([]))
+    assert live.n_triples == 0
+    added = live.insert([("<http://ex/a>", "<http://ex/p>", '"1"')])
+    assert added == 1 and live.n_triples == 1
+    rows = live.solve("SELECT ?s ?o WHERE { ?s ?p ?o }").rows(0)
+    assert rows == [("<http://ex/a>", '"1"')]
+    live.delete([("<http://ex/a>", "<http://ex/p>", '"1"')])
+    assert live.n_triples == 0
+    assert live.solve("SELECT ?s ?o WHERE { ?s ?p ?o }").rows(0) == []
+    compacted = live.compact()
+    assert compacted.n_triples == 0
+
+
+def test_tombstone_resurrect_and_dupes():
+    live = _tiny_live()
+    t = ("<http://ex/s0>", "<http://ex/p0>", '"1"')
+    assert live.insert([t]) == 0  # already in base: no-op
+    assert live.delete([t]) == (1, 1)  # tombstones the base row
+    assert live.n_triples == 1 and live.n_tombstones == 1
+    assert live.insert([t]) == 1  # resurrection clears the tombstone
+    assert live.n_tombstones == 0 and live.n_triples == 2
+    assert live.delete([("<http://ex/zz>", "<http://ex/p0>", '"1"')]) == (0, 0)
+    # deleting a delta insert removes it from the log, no tombstone
+    t2 = ("<http://ex/new1>", "<http://ex/p1>", '"5"')
+    live.insert([t2])
+    assert live.delete([t2]) == (1, 0)
+    assert live.n_delta == 0
+
+
+def test_kg_solve_on_live_store():
+    """repro.kg.solve routes through the overlay when handed a LiveStore."""
+    live = _tiny_live()
+    live.insert([("<http://ex/s2>", "<http://ex/p0>", '"3"')])
+    b = solve(live, parse_bgp("?s <http://ex/p0> ?o"))
+    assert b.n == 3
+
+
+# --------------------------------------------------------------------------
+# the wire: live server round-trip, read-only rejection
+# --------------------------------------------------------------------------
+
+
+def test_server_live_roundtrip(tmp_path):
+    reg = MetricsRegistry()
+    kg_path = str(tmp_path / "srv.kgz")
+    live = _tiny_live()
+    persist.save(live.base, kg_path)
+    srv = KGServer(
+        live, port=0, log=False, registry=reg, kg_path=kg_path
+    ).start()
+    try:
+        with connect(srv.host, srv.port) as c:
+            q = "SELECT ?s ?o WHERE { ?s <http://ex/p0> ?o }"
+            assert c.query(q)["n_total"] == 2
+            r = c.insert([["<http://ex/new0>", "<http://ex/p0>", '"3"']])
+            assert r["inserted"] == 1 and r["n_total"] == 3
+            assert c.query(q)["n_total"] == 3
+            r = c.delete([["<http://ex/s0>", "<http://ex/p0>", '"1"']])
+            assert (r["deleted"], r["tombstoned"]) == (1, 1)
+            assert c.query(q)["n_total"] == 2
+            r = c.compact()
+            assert r["compacted"] and r["persisted"] and r["n_total"] == 2
+            assert c.query(q)["rows"] == [
+                ["<http://ex/new0>", '"3"'],
+                ["<http://ex/s1>", '"2"'],
+            ]
+            m = c.metrics()["metrics"]
+            assert m["counters"]["live.inserts"] == 1
+            assert m["counters"]["live.deletes"] == 1
+            assert m["counters"]["live.tombstone_hits"] == 1
+            assert m["counters"]["live.compactions"] == 1
+            assert m["histograms"]["live.compact_ms"]["count"] == 1
+            assert m["gauges"]["live.delta_fraction"] == 0.0
+    finally:
+        srv.stop()
+    # compact persisted the rebuilt store under the served path
+    reopened = persist.open_store(kg_path)
+    assert reopened.n_triples == 2
+    assert getattr(reopened, "_kgz_generation") == live.generation
+
+
+def _raw_roundtrip(c, req: dict) -> dict:
+    """Send on the client's socket without the error-raising wrapper, so
+    the structured error reply itself can be inspected."""
+    import json
+
+    c._next_id += 1
+    c._sock.sendall(
+        (json.dumps({"id": c._next_id, **req}) + "\n").encode("utf-8")
+    )
+    return json.loads(c._rfile.readline())
+
+
+def test_server_read_only_rejects_mutations():
+    for store in (_tiny_live().base, _tiny_live()):  # plain and wrapped
+        reg = MetricsRegistry()
+        srv = KGServer(
+            store, port=0, log=False, registry=reg, read_only=True
+        ).start()
+        try:
+            with connect(srv.host, srv.port) as c:
+                for req in (
+                    {"op": "insert",
+                     "triples": [["<http://x/a>", "<http://x/p>", '"1"']]},
+                    {"op": "delete",
+                     "triples": [["<http://x/a>", "<http://x/p>", '"1"']]},
+                    {"op": "compact"},
+                ):
+                    resp = _raw_roundtrip(c, req)
+                    assert resp["code"] == "read_only"
+                    assert "read-only" in resp["error"]
+                # queries still served after rejected writes
+                assert (
+                    c.query("SELECT ?s ?o WHERE { ?s <http://ex/p0> ?o }")[
+                        "n_total"
+                    ]
+                    == 2
+                )
+            assert reg.counter("live.rejected").value == 3
+        finally:
+            srv.stop()
