@@ -11,7 +11,10 @@ in ``--baseline-dir``, every ``queries_per_s`` leaf is compared: the gate
 (default 30%).  **Tail latency is gated too**: every ``latency_p99_ms``
 leaf fails the gate when it grows by more than ``--latency-threshold``
 (default 50%) after machine-speed normalization — so the regression
-harness sees what users feel, not just mean throughput.
+harness sees what users feel, not just mean throughput.  That generic
+walk covers ``BENCH_serve.json``'s ``smallbatch`` section too: the
+batch-1/8/64 per-dispatch tails through the scan-join fast path are
+gated the moment their baseline leaves are committed.
 ``rows_per_s`` and ``latency_p50_ms`` leaves are reported but never
 gated.  Leaves with a zero or missing baseline — a new query class, an
 empty-store section — are reported as ``new`` and never gated, so adding

@@ -253,7 +253,9 @@ def bench_serve(json_dir: str = ".") -> None:
     queries/s AND per-dispatch latency p50/p99 through the fused jitted
     executor for point lookups, a 3-pattern star BGP, an OPTIONAL+FILTER
     query, a 2-arm UNION, an ORDER BY DESC, and a GROUP BY-COUNT, each at
-    batch sizes 1/64/4096.  Writes ``BENCH_serve.json`` (``queries_per_s``
+    batch sizes 1/64/4096 — plus the ``smallbatch`` section: the
+    chain-eligible classes at batch 1/8/64 through the fused scan-join
+    fast path.  Writes ``BENCH_serve.json`` (``queries_per_s``
     and ``latency_p99_ms`` gated in CI by ``benchmarks/compare.py``
     against the committed baseline — see ``benchmarks/README.md``) plus
     the run's dispatch trace (``TRACE_serve.json``, Perfetto-loadable)
@@ -281,6 +283,17 @@ def bench_serve(json_dir: str = ".") -> None:
                 f"queries_per_s={r['queries_per_s']:.0f};"
                 f"p50_ms={r['latency_p50_ms']:.3f};"
                 f"p99_ms={r['latency_p99_ms']:.3f}",
+            )
+    # the interactive regime: per-dispatch tails through the fused
+    # scan-join fast path at batch 1/8/64 (see repro.serve.fastpath)
+    for name, cls in report["smallbatch"].items():
+        for batch, r in cls["batches"].items():
+            _row(
+                f"serve/smallbatch-{name}-b{batch}",
+                r["wall_s"] / r["n_queries"] * 1e6,
+                f"p50_ms={r['latency_p50_ms']:.3f};"
+                f"p99_ms={r['latency_p99_ms']:.3f};"
+                f"fastpath={r['fastpath_dispatches']}",
             )
     _write_json(json_dir, "BENCH_serve.json", report)
     _write_json(json_dir, "TRACE_serve.json", obs.get_tracer().export())

@@ -82,35 +82,41 @@ print(f"algebra smoke OK: union={union['n_total']} rows, "
       f"{count['n_total']} gene groups summing to {sum(ns)}")
 EOF
 
-# live round-trip over the wire: insert -> query -> delete a base triple
-# (tombstoned until compaction) -> compact (persists back to the .kgz) ->
-# query, asserting counts and the live.* observability counters
+# live round-trip over the wire, driven through the unified repro.api
+# client path: insert -> query -> delete a base triple (tombstoned until
+# compaction) -> compact (persists back to the .kgz) -> query, asserting
+# counts, typed errors, and the live.* observability counters
 python - "$PORT" <<'EOF'
 import sys
-from repro.serve.client import connect
+from repro import api
 
 GN = "<http://repro.org/vocab/gene_name>"
 q = f"SELECT * WHERE {{ ?m {GN} ?g }}"
-with connect("127.0.0.1", int(sys.argv[1]), retry_s=30) as c:
+with api.connect(f"127.0.0.1:{int(sys.argv[1])}", retry_s=30) as c:
     before = c.query(q)
-    n0 = before["n_total"]
+    n0 = before.n_total
+    try:  # typed errors surface over the wire with their structured code
+        c.query("SELECT nonsense")
+        raise AssertionError("bad query text must raise")
+    except api.QueryParseError as e:
+        assert e.code == "parse", e.code
     r = c.insert([["<http://smoke/x1>", GN, '"live-one"'],
                   ["<http://smoke/x2>", GN, '"live-two"']])
     assert r["inserted"] == 2 and r["generation"] >= 1, r
     mid = c.query(q)
-    assert mid["n_total"] == n0 + 2, (mid["n_total"], n0)
+    assert mid.n_total == n0 + 2, (mid.n_total, n0)
     # tombstone a base triple (delete before compaction masks, not rewrites)
-    m, g = before["rows"][0]
+    m, g = before.rows[0]
     d = c.delete([[m, GN, g]])
     assert (d["deleted"], d["tombstoned"]) == (1, 1), d
     assert d["delta_fraction"] > 0, d
     after = c.query(q)
-    assert after["n_total"] == n0 + 1, (after["n_total"], n0)
+    assert after.n_total == n0 + 1, (after.n_total, n0)
     rc = c.compact()
     assert rc["compacted"] and rc["persisted"], rc
     assert rc["delta_fraction"] == 0 and rc["n_total"] >= n0 + 1, rc
     final = c.query(q)
-    assert final["n_total"] == n0 + 1, (final["n_total"], n0)
+    assert final.n_total == n0 + 1, (final.n_total, n0)
     met = c.metrics()["metrics"]
     cnt = met["counters"]
     assert cnt["live.inserts"] == 2, cnt
@@ -119,7 +125,7 @@ with connect("127.0.0.1", int(sys.argv[1]), retry_s=30) as c:
     assert met["histograms"]["live.compact_ms"]["count"] == 1, met["histograms"]
     assert met["gauges"]["live.delta_fraction"] == 0.0, met["gauges"]
     print(f"live smoke OK: {n0} -> insert 2 -> tombstone 1 -> "
-          f"compact({rc['compact_ms']}ms, persisted) -> {final['n_total']}")
+          f"compact({rc['compact_ms']}ms, persisted) -> {final.n_total}")
 EOF
 
 # observability over the wire: the metrics op must report a non-empty

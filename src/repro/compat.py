@@ -12,6 +12,19 @@ from __future__ import annotations
 import jax
 
 
+def pallas_native() -> bool:
+    """True when the active jax backend compiles Pallas kernels natively
+    (TPU/GPU).  On CPU hosts Pallas only runs under ``interpret=True`` —
+    correct but slow — so production call sites (the serving fast path)
+    use this gate to pick the fused-kernel launch on accelerators and the
+    jitted reference formulation on CPU, while tests exercise the kernel
+    in interpret mode regardless of backend."""
+    try:
+        return jax.default_backend() in ("tpu", "gpu")
+    except Exception:  # pragma: no cover - backend probing never raises
+        return False
+
+
 def current_mesh():
     """The active mesh: the abstract mesh on new jax, the ``with mesh:``
     context mesh on jax<=0.4 (no ``get_abstract_mesh``)."""

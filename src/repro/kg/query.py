@@ -264,22 +264,17 @@ class Bindings:
 
 
 def solve(store: TripleStore, patterns: list[TriplePattern]) -> Bindings:
-    """Conjunctive BGP evaluation through the ``repro.serve``
-    planner/executor — the same fused jitted pipeline the query server
-    runs: scans ordered by index-measured cardinality (connected joins
-    preferred), sorted-merge joins on padded device binding tables, rows
-    deterministically sorted by term id.  (Lazy import: ``serve`` layers on
-    ``kg``, not the other way around.)"""
+    """Conjunctive BGP evaluation — a shim over the unified query API:
+    :class:`repro.api.LocalSession` resolves the store (plain or live,
+    overlay view captured per call) and runs the same fused jitted
+    planner/executor pipeline the query server dispatches through.
+    Kept for callers that want *encoded* (term-id) binding tables; new
+    code should use ``repro.api.connect``.  (Lazy import: ``api`` layers
+    on ``kg``, not the other way around.)"""
+    from repro.api import LocalSession
     from repro.serve.algebra import SelectQuery
-    from repro.serve.exec import get_executor, solve_select
 
-    q = SelectQuery(patterns=tuple(patterns))
-    if hasattr(store, "view") and hasattr(store, "base"):
-        # a live store: run over its current base ⊕ delta snapshot
-        ex = get_executor(store.base)
-        res = ex.execute(ex.plan(q), [q], view=store.view())
-    else:
-        res = solve_select(store, q)
+    res = LocalSession(store).execute(SelectQuery(patterns=tuple(patterns)))
     n = int(res.counts[0])
     cols = {
         v: np.asarray(res.cols[v][0, :n], np.int32) for v in res.vars

@@ -43,9 +43,8 @@ def main() -> None:
                          "(dispatch / redispatch spans; open in Perfetto)")
     args = ap.parse_args()
 
-    from repro import obs
+    from repro import api, obs
     from repro.kg import persist
-    from repro.serve import get_executor, parse_select
 
     if args.trace:
         obs.enable_tracing()
@@ -55,24 +54,24 @@ def main() -> None:
         f"from {args.kg}",
         file=sys.stderr,
     )
+    session = api.connect(store)
 
     if args.query:
-        q = parse_select(" . ".join(args.query))
-        executor = get_executor(store)
-        plan = executor.plan(q)
+        text = " . ".join(args.query)
         if args.explain:
-            print(plan.explain())
+            print(session.explain(text))
         else:
-            result = executor.execute(plan, [q])
-            rows = result.rows(0, limit=args.limit)
+            result = session.query(text, limit=args.limit)
             print("\t".join(result.vars))
-            for row in rows:
+            for row in result:
                 # COUNT cells are plain ints, unbound cells are None
                 print("\t".join("∅" if t is None else str(t) for t in row))
             shown = (
-                f" (showing {len(rows)})" if len(rows) < result.n(0) else ""
+                f" (showing {len(result)})"
+                if len(result) < result.n_total else ""
             )
-            print(f"[query] {result.n(0)} solutions{shown}", file=sys.stderr)
+            print(f"[query] {result.n_total} solutions{shown}",
+                  file=sys.stderr)
 
     if args.bench:
         # an empty graph reports a zero-query section (the guard is unified

@@ -37,6 +37,10 @@ def main() -> None:
                     help="serve the snapshot immutably: insert/delete/"
                          "compact wire ops come back as structured "
                          "read_only errors instead of mutating")
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="skip the start-up plan/signature warm-up (the "
+                         "server pre-compiles the common single-pattern "
+                         "and star-join shapes so first queries skip jit)")
     ap.add_argument("--bench", action="store_true",
                     help="measure the fused-pipeline query classes over "
                          "--kg and exit (writes the BENCH_serve.json shape; "
@@ -63,13 +67,15 @@ def main() -> None:
     if args.connect:
         if not args.query and not args.metrics:
             ap.error("--connect needs --query (or --metrics)")
-        from repro.serve.client import connect
+        from repro import api
 
         host, _, port = args.connect.rpartition(":")
-        with connect(host or "127.0.0.1", int(port), retry_s=args.retry_s) as c:
-            resp = c.metrics() if args.metrics else c.query(
-                args.query, limit=args.limit
-            )
+        target = f"{host or '127.0.0.1'}:{int(port)}"
+        with api.connect(target, retry_s=args.retry_s) as s:
+            if args.metrics:
+                resp = s.metrics()
+            else:
+                resp = s.query(args.query, limit=args.limit).to_dict()
         print(json.dumps(resp, indent=2))
         return
 
@@ -125,6 +131,7 @@ def main() -> None:
             max_rows=args.max_rows,
             read_only=args.read_only,
             kg_path=kg_path,
+            warmup=not args.no_warmup,
         ).serve_forever()
     finally:
         if args.trace:

@@ -21,6 +21,13 @@ Every query is derived from an existing triple, so every query has at
 least one answer.  Constants vary per query; the plan (and the compiled
 pipeline) is shared per class — exactly the server's steady state.
 
+A separate ``smallbatch`` section times the interactive regime: the
+``single`` and ``bgp3`` classes at batch 1 / 8 / 64, where dispatches
+route through the fused scan-join fast path (``repro.serve.fastpath``).
+Its ``latency_p99_ms`` leaves are what the CI regression gate watches
+for the per-dispatch constant, and ``fastpath_dispatches`` records the
+routing share so a silently disabled fast path is visible in the report.
+
 An empty store yields the zero-query report (:func:`empty_report`) —
 sections exist, counts are zero — instead of erroring, so ``--bench``
 CLI paths and CI never need ad-hoc guards.
@@ -41,6 +48,12 @@ from repro.serve.exec import Executor, get_executor
 BATCH_SIZES = (1, 64, 4096)
 
 CLASS_NAMES = ("single", "bgp3", "opt_filter", "union", "orderby", "groupcount")
+
+# the interactive regime: the small-batch fast path's own section
+# (single and bgp3 are chain-eligible; batch sizes bracket the
+# fast path's routing window)
+SMALLBATCH_SIZES = (1, 8, 64)
+SMALLBATCH_CLASSES = ("single", "bgp3")
 
 
 def empty_report(
@@ -69,6 +82,13 @@ def empty_report(
                 "batches": {str(b): dict(zero) for b in batch_sizes},
             }
             for name in CLASS_NAMES
+        },
+        "smallbatch": {
+            name: {
+                "query": None,
+                "batches": {str(b): dict(zero) for b in SMALLBATCH_SIZES},
+            }
+            for name in SMALLBATCH_CLASSES
         },
     }
 
@@ -207,4 +227,52 @@ def bench_serve(
                 "latency_max_ms": lat.max,
             }
         report["classes"][name] = {"query": qtext, "batches": per_batch}
+
+    # the interactive regime: per-dispatch p50/p99 at batch 1/8/64 for
+    # the chain-eligible classes, where the small-batch fast path (one
+    # fused scan-join launch, packed per-query staging row) carries the
+    # dispatch.  Many more batches than the throughput loop above, so
+    # the p99 is a real tail, and the fastpath share is recorded so a
+    # routing regression (fast path silently disabled) shows up in the
+    # report, not just in the latency gate.
+    from repro.obs import get_registry
+
+    reg = get_registry()
+    by_name = dict(classes)
+    report["smallbatch"] = {}
+    for name in SMALLBATCH_CLASSES:
+        qtext = by_name[name]
+        per_batch = {}
+        for batch in SMALLBATCH_SIZES:
+            n_batches = max(16, min(2048 // batch, 256))
+            plan, batches, fops = _encoded_batches(
+                executor, qtext, p0, batch, n_batches, seed
+            )
+            total = 0
+            for consts in batches[: max(2, n_batches // 8)]:
+                total += int(
+                    executor.execute_encoded(plan, consts, fops).counts.sum()
+                )
+            fp0 = reg.counter("exec.fastpath_dispatches").value
+            lat = Histogram()
+            t0 = time.perf_counter()
+            for consts in batches:
+                d0 = time.perf_counter_ns()
+                executor.execute_encoded(plan, consts, fops)
+                lat.observe((time.perf_counter_ns() - d0) / 1e6)
+            dt = time.perf_counter() - t0
+            n_queries = n_batches * batch
+            per_batch[str(batch)] = {
+                "n_queries": n_queries,
+                "n_batches": n_batches,
+                "wall_s": dt,
+                "queries_per_s": n_queries / dt,
+                "warm_matches": total,
+                "fastpath_dispatches":
+                    reg.counter("exec.fastpath_dispatches").value - fp0,
+                "latency_p50_ms": lat.percentile(50),
+                "latency_p99_ms": lat.percentile(99),
+                "latency_max_ms": lat.max,
+            }
+        report["smallbatch"][name] = {"query": qtext, "batches": per_batch}
     return report

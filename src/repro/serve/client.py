@@ -1,10 +1,16 @@
 """Minimal client for the :mod:`repro.serve.server` wire protocol.
 
+This is the raw transport under :class:`repro.api.RemoteSession` —
+new code should use ``repro.api.connect("host:port")`` and get the
+unified :class:`~repro.api.QueryResult` surface; this module stays for
+callers that want the wire dicts verbatim.
+
 Answers are plain dicts off the wire: ``vars`` / ``rows`` / ``n_total``.
 Aggregate (COUNT) columns are listed in the answer's ``agg_vars`` and
 their row cells are JSON numbers; every other cell is a rendered
 N-Triples term, ``None`` when unbound (an OPTIONAL miss or a UNION arm
-that does not bind the variable)."""
+that does not bind the variable).  Error replies raise the typed
+:mod:`repro.api.errors` hierarchy (all ``RuntimeError`` subclasses)."""
 
 from __future__ import annotations
 
@@ -36,15 +42,22 @@ class Client:
         self.close()
 
     def _roundtrip(self, req: dict) -> dict:
+        from repro.api.errors import ProtocolError, error_from_reply
+
         self._next_id += 1
         req = {"id": self._next_id, **req}
         self._sock.sendall((json.dumps(req) + "\n").encode("utf-8"))
         line = self._rfile.readline()
         if not line:
-            raise ConnectionError("server closed the connection")
+            # ProtocolError is also a ConnectionError — old callers
+            # that caught that still do
+            raise ProtocolError("server closed the connection")
         resp = json.loads(line)
         if resp.get("error"):
-            raise RuntimeError(f"server error: {resp['error']}")
+            # the typed repro.api.errors hierarchy, keyed by the reply's
+            # structured "code" (every class is a RuntimeError and the
+            # message keeps the "server error: ..." prefix)
+            raise error_from_reply(resp)
         return resp
 
     def query(self, text: str, limit: int | None = None) -> dict:

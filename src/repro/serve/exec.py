@@ -46,12 +46,14 @@ from repro.kg.query import _lex_search
 from repro.kg.store import ORDERS, TripleStore
 from repro.obs import get_registry, get_tracer
 from repro.serve import algebra as A
+from repro.serve import fastpath as FP
 from repro.serve import plan as P
 from repro.serve.values import value_table
 
 I32_MAX = np.int32(np.iinfo(np.int32).max)
 UNBOUND = np.int32(-1)
 _MAX_GROW_ROUNDS = 12
+_FP_UNSET = object()  # fast-path cache sentinel (None = ineligible plan)
 
 
 def plan_label(sig: tuple) -> str:
@@ -1178,11 +1180,17 @@ class Executor:
     """Per-store query executor: plan cache, capacity memory, compiled
     pipeline cache.  Get one via :func:`get_executor`."""
 
+    #: route eligible small batches through the fused scan-join chain
+    #: (``repro.serve.fastpath``); tests flip this off to force the
+    #: general pipeline for equivalence checks
+    fastpath_enabled = True
+
     def __init__(self, store: TripleStore):
         self.store = store
         self._plans: dict[tuple, P.Plan] = {}
         self._floors: dict[tuple, dict[str, int]] = {}
         self._compiled: dict[tuple, callable] = {}
+        self._fastpaths: dict[tuple, "FP.SigFastPath | None"] = {}
         self.dispatches = 0  # total jitted pipeline dispatches (for tests)
 
     # -- plans ---------------------------------------------------------------
@@ -1339,6 +1347,26 @@ class Executor:
                 counts=np.zeros(bsz, np.int64),
                 agg_vars=plan.agg_vars,
             )
+        if (
+            view is None
+            and self.fastpath_enabled
+            and bsz <= FP.MAX_BATCH
+        ):
+            fp = self._fastpaths.get(plan.sig, _FP_UNSET)
+            if fp is _FP_UNSET:
+                fp = FP.build(self, plan)
+                self._fastpaths[plan.sig] = fp
+            if fp is not None:
+                res = fp.dispatch(consts, limits, bsz)
+                if res is not None:  # None: outgrew the small-batch regime
+                    fcols, counts = res
+                    return BatchResult(
+                        store=store,
+                        vars=out_vars,
+                        cols=dict(zip(out_vars, fcols)),
+                        counts=counts,
+                        agg_vars=plan.agg_vars,
+                    )
         bpad = next_pow2(max(bsz, 1))
         if fops is None:
             fops = np.zeros((bsz, max(plan.n_filter_ops, 1)), np.int32)
@@ -1472,6 +1500,46 @@ class Executor:
 
     def solve(self, q: A.SelectQuery) -> BatchResult:
         return self.execute(self.plan(q), [q])
+
+    def warmup(self, top_k: int = 2) -> int:
+        """Pre-trace the dominant interactive shapes — the 1-, 2- and
+        3-pattern star chains anchored on the store's ``top_k`` most
+        frequent predicates — at batch pad 1, so a freshly started
+        server answers its first small-batch query without paying a jit
+        compile.  Returns the number of signatures warmed (compilation
+        happens as a side effect of actually executing each shape
+        once; the capacity floors learned here persist too)."""
+        store = self.store
+        if store.n_triples == 0:
+            return 0
+        prim = np.asarray(store.indexes["pos"].cols[0])
+        preds, cnts = np.unique(prim, return_counts=True)
+        top = [
+            store.decode_term(int(p))
+            for p in preds[np.argsort(cnts)[::-1][: max(top_k, 1)]]
+        ]
+        texts = []
+        for p in top:
+            texts.append(f"SELECT * WHERE {{ ?s {p} ?o }}")
+        if len(top) >= 2:
+            p0, p1 = top[0], top[1]
+            texts.append(
+                f"SELECT * WHERE {{ ?s {p0} ?o0 . ?s {p1} ?o1 }}"
+            )
+            texts.append(
+                "SELECT * WHERE { "
+                + f"?s {p0} ?o0 . ?s {p1} ?o1 . ?s {p0} ?o2 "
+                + "}"
+            )
+        warmed = 0
+        for text in texts:
+            try:
+                q = A.parse_select(text)
+                self.execute(self.plan(q), [q])
+                warmed += 1
+            except Exception:  # a shape the store can't serve: skip it
+                continue
+        return warmed
 
 
 def get_executor(store: TripleStore) -> Executor:

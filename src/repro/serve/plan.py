@@ -839,6 +839,50 @@ def plan_query(store: TripleStore, q: A.SelectQuery) -> Plan:
     )
 
 
+FASTPATH_MAX_READERS = 3
+
+
+def fastpath_chain(plan: Plan) -> tuple | None:
+    """Structural eligibility for the small-batch fused scan-join fast
+    path (``repro.serve.fastpath``): a pure ``Scan → BindJoin*`` chain of
+    at most :data:`FASTPATH_MAX_READERS` readers — inner joins only, no
+    repeated-variable patterns, no filters / aggregates / DISTINCT /
+    ORDER BY / UNION / OPTIONAL — under the standard ``Project → Sort
+    [→ Limit]`` tail.  Returns the reader nodes in pipeline order (they
+    must coincide with ``plan.scans`` so consts rows line up), or None
+    when the plan needs the general executor."""
+    if plan.has_filters or plan.n_filter_ops or plan.agg_vars:
+        return None
+    node = plan.root
+    if isinstance(node, Limit):
+        node = node.child
+    if not isinstance(node, Sort):
+        return None
+    node = node.child
+    if not isinstance(node, Project):
+        return None
+    node = node.child
+    readers: list = []
+    while isinstance(node, BindJoin):
+        if node.kind != "inner" or node.eq_pairs or not node.free_slots:
+            return None
+        readers.append(node)
+        node = node.left
+    if not isinstance(node, Scan):
+        return None
+    if node.eq_pairs or not node.out_vars:
+        return None
+    readers.append(node)
+    readers.reverse()
+    if len(readers) > FASTPATH_MAX_READERS:
+        return None
+    if tuple(r.node_id for r in readers) != tuple(
+        s.node_id for s in plan.scans
+    ):
+        return None
+    return tuple(readers)
+
+
 def encode_scan_consts(
     store: TripleStore, plan: Plan, q: A.SelectQuery
 ) -> np.ndarray:

@@ -33,8 +33,13 @@ rejected with ``"code": "read_only"`` on a read-only or plain store):
     <- {"id": 6, "compacted": true, "compact_ms": 12.3, "persisted": true,
         "n_total": 100, "generation": 4}
 
-Errors come back as ``{"id": ..., "error": "..."}``; ``rows`` hold rendered
-N-Triples terms with ``null`` for unbound (OPTIONAL-miss) variables.
+Errors come back as ``{"id": ..., "error": "...", "code": "..."}`` where
+``code`` is one of ``parse`` (bad query text), ``bad_request`` (malformed
+request: missing ``query``, bad ``limit``/``triples``, bad json),
+``read_only`` (mutation on a read-only store) or ``internal`` (handler
+failure) — :mod:`repro.api.errors` maps them to typed exceptions.
+``rows`` hold rendered N-Triples terms with ``null`` for unbound
+(OPTIONAL-miss) variables.
 
 Batching: connection threads only parse and enqueue; a single dispatcher
 thread drains the queue (a short linger lets concurrent clients pile up),
@@ -97,6 +102,71 @@ class _Pending:
     triples: list | None = None
 
 
+class _AdaptiveLinger:
+    """Pick the micro-batch linger window from the live arrival rate.
+
+    The fixed window trades every request's latency for batch size even
+    when nobody else is queuing — the worst deal exactly where the
+    small-batch fast path matters (interactive, batch-1 traffic).  This
+    tracks an EWMA of the inter-arrival gap and sizes the window by the
+    *expected coalesce gain*:
+
+    * no rate estimate yet (cold start) → the full configured window,
+      the previous fixed behavior;
+    * expected arrivals within a full window below ``min_expected`` →
+      zero linger: dispatch immediately, nobody was going to share the
+      batch anyway;
+    * otherwise scale the window with the fraction of a full batch
+      (``full_batch``) a max-length linger would collect, floored at
+      the executor's observed p50 execute time (batching finer than one
+      dispatch can't help — requests pile up behind the dispatch
+      regardless) and capped at the configured maximum.
+
+    Arrival observation is a single EWMA update per request (connection
+    threads; GIL-atomic enough — the window only needs to be roughly
+    right).  Unit-testable deterministically via ``observe_arrival`` /
+    ``window_s``.
+    """
+
+    def __init__(
+        self,
+        max_s: float,
+        registry: MetricsRegistry,
+        full_batch: int = 64,
+        alpha: float = 0.2,
+        min_expected: float = 1.5,
+    ):
+        self.max_s = max_s
+        self.registry = registry
+        self.full_batch = full_batch
+        self.alpha = alpha
+        self.min_expected = min_expected
+        self._last_ns: int | None = None
+        self._gap_s: float | None = None  # EWMA inter-arrival gap
+
+    def observe_arrival(self, t_ns: int) -> None:
+        last = self._last_ns
+        self._last_ns = t_ns
+        if last is None:
+            return
+        gap = max((t_ns - last) / 1e9, 1e-9)
+        g = self._gap_s
+        self._gap_s = gap if g is None else (1 - self.alpha) * g + self.alpha * gap
+
+    def window_s(self) -> float:
+        g = self._gap_s
+        if g is None or self.max_s <= 0:
+            return self.max_s
+        expected = self.max_s / g  # arrivals a full linger would see
+        if expected < self.min_expected:
+            return 0.0
+        w = self.max_s * min(1.0, expected / self.full_batch)
+        p50_ms = self.registry.histogram("serve.exec_ms").percentile(50)
+        if p50_ms:
+            w = max(w, min(self.max_s, p50_ms / 1e3))
+        return min(w, self.max_s)
+
+
 class KGServer:
     """Serve one store — immutable, or mutable when wrapped in a
     :class:`LiveStore`; see the module docstring for protocol."""
@@ -113,6 +183,8 @@ class KGServer:
         registry: MetricsRegistry | None = None,
         read_only: bool = False,
         kg_path: str | None = None,
+        warmup: bool = False,
+        adaptive_linger: bool = True,
     ):
         if isinstance(store, LiveStore):
             self.live: LiveStore | None = store
@@ -134,6 +206,18 @@ class KGServer:
         # the process-global registry by default (so the `metrics` op also
         # surfaces executor/stream metrics); tests pass their own
         self.registry = registry if registry is not None else get_registry()
+        # adaptive micro-batch window: linger_ms is the MAXIMUM; the live
+        # arrival rate shrinks it (to zero for sparse interactive traffic)
+        self._linger = _AdaptiveLinger(
+            max_s=self.linger_s, registry=self.registry, full_batch=max(
+                1, min(self.max_batch, 64)
+            ),
+        )
+        self._adaptive = adaptive_linger
+        if warmup:
+            # pre-trace the dominant small-batch shapes so the first
+            # interactive query after start pays no jit compile
+            self.executor.warmup()
         # plan-signature label -> an example query text, so the `metrics`
         # op's per-signature histograms are interpretable
         self._sig_examples: dict[str, str] = {}
@@ -218,14 +302,15 @@ class KGServer:
                     req = json.loads(line)
                 except json.JSONDecodeError as e:
                     self.registry.inc("serve.errors")
-                    send({"error": f"bad json: {e}"})
+                    send({"error": f"bad json: {e}", "code": "bad_request"})
                     continue
                 try:
                     self._handle(req, send)
                 except Exception as e:  # noqa: BLE001 — never drop the socket
                     self.registry.inc("serve.errors")
                     rid = req.get("id") if isinstance(req, dict) else None
-                    send({"id": rid, "error": f"{type(e).__name__}: {e}"})
+                    send({"id": rid, "error": f"{type(e).__name__}: {e}",
+                          "code": "internal"})
         finally:
             try:
                 conn.close()
@@ -268,13 +353,14 @@ class KGServer:
         text = req.get("query")
         if not isinstance(text, str):
             self.registry.inc("serve.errors")
-            send({"id": req.get("id"), "error": "missing 'query'"})
+            send({"id": req.get("id"), "error": "missing 'query'",
+                  "code": "bad_request"})
             return
         try:
             q = algebra.parse_select(text)
         except ValueError as e:
             self.registry.inc("serve.errors")
-            send({"id": req.get("id"), "error": str(e)})
+            send({"id": req.get("id"), "error": str(e), "code": "parse"})
             return
         if op == "explain":
             plan = self.executor.plan(q)
@@ -286,8 +372,11 @@ class KGServer:
         ):
             self.registry.inc("serve.errors")
             send({"id": req.get("id"),
-                  "error": "'limit' must be a non-negative integer"})
+                  "error": "'limit' must be a non-negative integer",
+                  "code": "bad_request"})
             return
+        t_enq = time.perf_counter_ns()
+        self._linger.observe_arrival(t_enq)
         self._queue.put(
             _Pending(
                 query=q,
@@ -295,7 +384,7 @@ class KGServer:
                 req_id=req.get("id"),
                 limit=limit,
                 reply=send,
-                t_enq_ns=time.perf_counter_ns(),
+                t_enq_ns=t_enq,
             )
         )
 
@@ -331,8 +420,11 @@ class KGServer:
                     "id": req.get("id"),
                     "error": "'triples' must be a non-empty list of "
                              "[s, p, o] term-string triples",
+                    "code": "bad_request",
                 })
                 return
+        t_enq = time.perf_counter_ns()
+        self._linger.observe_arrival(t_enq)
         self._queue.put(
             _Pending(
                 query=None,
@@ -340,7 +432,7 @@ class KGServer:
                 req_id=req.get("id"),
                 limit=None,
                 reply=send,
-                t_enq_ns=time.perf_counter_ns(),
+                t_enq_ns=t_enq,
                 op=op,
                 triples=triples,
             )
@@ -356,7 +448,10 @@ class KGServer:
         except queue.Empty:
             return []
         batch = [first]
-        deadline = time.perf_counter() + self.linger_s
+        linger = (
+            self._linger.window_s() if self._adaptive else self.linger_s
+        )
+        deadline = time.perf_counter() + linger
         while len(batch) < self.max_batch:
             remaining = deadline - time.perf_counter()
             if remaining <= 0:
@@ -447,7 +542,8 @@ class KGServer:
             p.reply(reply)
         except Exception as e:  # noqa: BLE001 — a bad write must not kill serving
             reg.inc("serve.errors")
-            p.reply({"id": p.req_id, "error": f"{type(e).__name__}: {e}"})
+            p.reply({"id": p.req_id, "error": f"{type(e).__name__}: {e}",
+                          "code": "internal"})
 
     def _run_group(self, group: list[_Pending]) -> None:
         reg = self.registry
@@ -478,7 +574,8 @@ class KGServer:
         except Exception as e:  # noqa: BLE001 — a bad query must not kill serving
             reg.inc("serve.errors", len(group))
             for p in group:
-                p.reply({"id": p.req_id, "error": f"{type(e).__name__}: {e}"})
+                p.reply({"id": p.req_id, "error": f"{type(e).__name__}: {e}",
+                          "code": "internal"})
             return
         dt = (time.perf_counter_ns() - t0_ns) / 1e9
         lat_ms = dt * 1e3
