@@ -11,6 +11,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   kg/*         — repro.kg store build + batched single-pattern queries/s
   live/*       — repro.live write path, overlay queries vs delta fraction,
                  and compaction (writes BENCH_live.json)
+  shard/*      — repro.shard routed vs scatter-all query cost at 1/2/4
+                 shards vs the unsharded baseline (writes BENCH_shard.json)
   roofline/*   — (when results/dryrun.json exists) the three terms per cell
 
 The ``stream`` and ``kg`` sections also write machine-readable
@@ -341,6 +343,43 @@ def bench_live(json_dir: str = ".") -> None:
     _write_json(json_dir, "BENCH_live.json", report)
 
 
+def bench_shard(json_dir: str = ".") -> None:
+    """The ``repro.shard`` scatter/gather benchmark on a 20K-row testbed
+    (shard stores are rebuilt in-process at 1/2/4 shards, so the testbed
+    stays small enough to re-encode three times inside the CI budget):
+    routed bound-subject lookups and scatter-all 3-pattern star BGPs
+    through the in-process shard session, per shard count, against the
+    unsharded baseline.  Writes ``BENCH_shard.json``
+    (``queries_per_s`` / ``latency_p99_ms`` gated by
+    ``benchmarks/compare.py``; the ``criteria`` section carries the
+    routed-overhead and scatter-cost acceptance ratios)."""
+    from repro.core.executor import create_kg
+    from repro.rml import generator
+    from repro.shard.bench import bench_shard as run_shard_bench
+
+    n = 20_000
+    tb = generator.make_testbed("SOM", n, 0.75, n_poms=2, seed=0)
+    tables = {"csv:child.csv": tb.child}
+    if tb.parent is not None:
+        tables["csv:parent.csv"] = tb.parent
+    store = create_kg(tb.doc, tables=tables).to_store()
+    report = run_shard_bench(store)
+    report["testbed_rows"] = n
+    for name, cls in report["classes"].items():
+        for config, r in cls["configs"].items():
+            _row(
+                f"shard/{name}-{config}",
+                r["wall_s"] / r["n_queries"] * 1e6,
+                f"queries_per_s={r['queries_per_s']:.0f};"
+                f"p50_ms={r['latency_p50_ms']:.3f};"
+                f"p99_ms={r['latency_p99_ms']:.3f};"
+                f"fanout={r['fanout_per_query']:.1f}",
+            )
+    for key, v in report.get("criteria", {}).items():
+        _row(f"shard/criteria-{key}", 0.0, f"ratio={v:.2f}")
+    _write_json(json_dir, "BENCH_shard.json", report)
+
+
 def bench_roofline() -> None:
     from benchmarks import roofline
 
@@ -364,7 +403,8 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     choices=(None, "fig56", "opmodel", "kernels", "dedup",
-                             "stream", "kg", "serve", "live", "roofline"))
+                             "stream", "kg", "serve", "live", "shard",
+                             "roofline"))
     ap.add_argument("--json-dir", default=".",
                     help="where BENCH_*.json reports are written")
     args = ap.parse_args()
@@ -379,6 +419,7 @@ def main() -> None:
         "kg": lambda: bench_kg(args.json_dir),
         "serve": lambda: bench_serve(args.json_dir),
         "live": lambda: bench_live(args.json_dir),
+        "shard": lambda: bench_shard(args.json_dir),
         "roofline": bench_roofline,
     }
     for name, fn in sections.items():

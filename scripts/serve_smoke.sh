@@ -7,12 +7,30 @@
 # locally:
 #
 #   scripts/serve_smoke.sh [port]
+#
+# By default the server binds port 0 (the kernel picks a free port) and
+# the script parses the chosen port from the startup log — parallel CI
+# jobs and the shard smoke test can never collide on a fixed port.
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PORT="${1:-7351}"
+PORT="${1:-0}"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 WORK="$(mktemp -d)"
 trap 'kill "${SERVER_PID:-}" 2>/dev/null || true; rm -rf "$WORK"' EXIT
+
+# wait for "[serve] listening on host:port" in a server log and echo the
+# port (the server announces the kernel-chosen port there when bound to 0)
+wait_for_port() {
+    local log="$1" port=""
+    for _ in $(seq 150); do
+        port="$(sed -n 's/.*\[serve\] listening on [^ :]*:\([0-9][0-9]*\).*/\1/p' "$log" | head -n 1)"
+        if [ -n "$port" ]; then echo "$port"; return 0; fi
+        sleep 0.2
+    done
+    echo "server never announced a listening port; log follows:" >&2
+    cat "$log" >&2
+    return 1
+}
 
 # tiny testbed: 200 rows, SOM mapping, written as csv + turtle
 python - "$WORK" <<'EOF'
@@ -28,8 +46,10 @@ python -m repro.launch.rdfize \
     --out "$WORK/kg.kgz" --emit kgz
 
 python -m repro.launch.serve --kg "$WORK/kg.kgz" --port "$PORT" \
-    --trace "$WORK/trace.json" &
+    --trace "$WORK/trace.json" 2>"$WORK/server.log" &
 SERVER_PID=$!
+PORT="$(wait_for_port "$WORK/server.log")"
+echo "[smoke] server is up on port $PORT"
 
 QUERY='SELECT * WHERE { ?m <http://repro.org/vocab/gene_name> ?g } LIMIT 3'
 OUT="$(python -m repro.launch.serve --connect "127.0.0.1:$PORT" \

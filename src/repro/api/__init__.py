@@ -178,9 +178,15 @@ class LocalSession(Session):
         view = self._live.view() if self._live is not None else None
         return ex.execute(ex.plan(q), [q], view=view)
 
-    def query(self, text: str, limit: int | None = None) -> QueryResult:
+    def query(
+        self, text: str, limit: int | None = None, *, parsed=None
+    ) -> QueryResult:
+        """``parsed`` short-circuits the parse with an already-built
+        :class:`~repro.serve.algebra.SelectQuery` — the shard fan-out
+        hands each in-process backend the query it parsed once for
+        routing, instead of re-parsing the text on every shard."""
         _check_limit(limit)
-        q = self._parse(text)
+        q = parsed if parsed is not None else self._parse(text)
         t0 = time.perf_counter_ns()
         res = self.execute(q)
         lat_ms = (time.perf_counter_ns() - t0) / 1e6
@@ -294,6 +300,10 @@ def connect(
     * a store object → :class:`LocalSession` over it as-is;
     * ``"host:port"`` (when no such file exists) → :class:`RemoteSession`
       (``retry_s`` keeps retrying the TCP connect — the CI smoke path);
+    * a shard-manifest path (``rdfize --shards N`` output) →
+      :class:`~repro.shard.coordinator.ShardSession` over every shard
+      store, with scatter/gather merging that answers byte-identically
+      to the unsharded store;
     * a ``.kgz`` path → :class:`LocalSession`; mutable
       (:class:`~repro.live.delta.LiveStore` over the loaded chain, delta
       snapshots replayed) unless ``read_only=True``, which opens the
@@ -303,7 +313,7 @@ def connect(
         if not (hasattr(target, "n_triples") and hasattr(target, "decode_term")):
             raise BadRequestError(
                 f"cannot connect to {type(target).__name__}: expected a "
-                "store object, a .kgz path, or 'host:port'"
+                "store object, a .kgz path, a shard manifest, or 'host:port'"
             )
         return LocalSession(target, read_only=read_only)
     target = os.fspath(target)
@@ -315,6 +325,10 @@ def connect(
         )
     from repro.kg import persist
 
+    if persist.is_manifest(target):
+        from repro.shard.coordinator import ShardSession, open_shard_group
+
+        return ShardSession(open_shard_group(target, read_only=read_only))
     if read_only:
         return LocalSession(persist.open_store(target), read_only=True)
     return LocalSession(persist.load_chain(target))

@@ -244,7 +244,31 @@ def load_chain(path: str):
 
 
 _OPEN_STORES: OrderedDict[tuple, TripleStore] = OrderedDict()
-_OPEN_STORES_MAX = 4
+# Sized for a sharded serving group: a coordinator keeps every shard of a
+# manifest open at once (plus a generation or two of compaction rewrites),
+# so the cap must comfortably exceed the largest expected shard count — a
+# cap smaller than N shards would evict-thrash on every scatter.  Long-
+# lived coordinators opening many shard *generations* stay bounded: old
+# generations fall off the LRU tail instead of leaking.
+_OPEN_STORES_MAX = 16
+
+
+def set_open_store_cache_size(max_stores: int) -> None:
+    """Resize the :func:`open_store` LRU (evicting oldest entries now if
+    shrinking).  A coordinator serving ``N`` shards should ensure the cap
+    is at least ``N`` + headroom; :mod:`repro.shard.coordinator` calls
+    this when a manifest names more shards than the current cap."""
+    global _OPEN_STORES_MAX
+    if max_stores < 1:
+        raise ValueError("open_store cache needs room for at least 1 store")
+    _OPEN_STORES_MAX = max_stores
+    while len(_OPEN_STORES) > _OPEN_STORES_MAX:
+        _OPEN_STORES.popitem(last=False)
+
+
+def open_store_cache_info() -> "tuple[int, int]":
+    """``(resident stores, cap)`` — test/diagnostic surface."""
+    return len(_OPEN_STORES), _OPEN_STORES_MAX
 
 
 def open_store(path: str) -> TripleStore:
@@ -255,8 +279,10 @@ def open_store(path: str) -> TripleStore:
     one open store instead of re-reading and re-validating the snapshot.
     A rewritten file changes the key and reloads; the generation component
     catches a same-second same-size rewrite (mtime_ns granularity is
-    filesystem-dependent, and compaction rewrites in place), and a small
-    LRU bounds resident stores."""
+    filesystem-dependent, and compaction rewrites in place), and the LRU
+    cap (:func:`set_open_store_cache_size`) bounds resident stores — every
+    rewrite generation makes a *new* key, so without eviction a long-lived
+    coordinator would accumulate one dead store per compaction."""
     st = os.stat(path)
     try:
         _, _, generation, _ = peek_meta(path)
@@ -377,3 +403,85 @@ def load(path: str) -> TripleStore:
         store, generation
     )
     return store
+
+
+# ---------------------------------------------------------------------------
+# shard manifests — one JSON file naming N partitioned .kgz shard stores
+# ---------------------------------------------------------------------------
+
+# A sharded KG is N ordinary full .kgz snapshots plus one JSON manifest:
+#
+#     {"format": "repro.shard/1",
+#      "n_shards": 2,
+#      "partition": {"by": "subject", "hash": "crc32"},
+#      "shards": [{"path": "kg.shard0.kgz", "n_triples": 61,
+#                  "n_terms": 40, "snapshot_id": 123, "generation": 0}, ...],
+#      "dictionary": {"n_terms_union": 71, "n_terms_shards": 78,
+#                     "n_triples": 120}}
+#
+# ``partition`` pins the assignment rule: triple -> shard by
+# crc32(rendered subject term) % n_shards (repro.shard.partition).  Term
+# ids are ranks of rendered terms and therefore build-dependent, so the
+# *rendered subject* — the stable content the id ranks — is what hashes;
+# a coordinator can route a bound-subject query without any shared id
+# space.  Each shard keeps its own term dictionary (rows cross the merge
+# as rendered terms, whose sort order IS global term-id order);
+# ``dictionary`` records the union/per-shard term totals the ingestion
+# barrier merged.  Shard paths are stored relative to the manifest.
+
+MANIFEST_FORMAT = "repro.shard/1"
+
+
+def save_manifest(path: str, manifest: dict) -> None:
+    import json
+
+    if manifest.get("format") != MANIFEST_FORMAT:
+        raise ValueError(
+            f"manifest format must be {MANIFEST_FORMAT!r}, "
+            f"got {manifest.get('format')!r}"
+        )
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def load_manifest(path: str) -> dict:
+    """Read and validate a shard manifest; shard entries gain an
+    ``abs_path`` resolved against the manifest's directory."""
+    import json
+
+    with open(path, encoding="utf-8") as f:
+        m = json.load(f)
+    if not isinstance(m, dict) or m.get("format") != MANIFEST_FORMAT:
+        raise ValueError(f"{path}: not a {MANIFEST_FORMAT} shard manifest")
+    shards = m.get("shards")
+    if not isinstance(shards, list) or len(shards) != m.get("n_shards"):
+        raise ValueError(
+            f"{path}: manifest shards disagree with n_shards="
+            f"{m.get('n_shards')}"
+        )
+    part = m.get("partition", {})
+    if part.get("by") != "subject" or part.get("hash") != "crc32":
+        raise ValueError(
+            f"{path}: unsupported partition spec {part!r} — this build "
+            "reads subject/crc32 manifests"
+        )
+    base = os.path.dirname(os.path.abspath(path))
+    for entry in shards:
+        p = entry["path"]
+        entry["abs_path"] = p if os.path.isabs(p) else os.path.join(base, p)
+    return m
+
+
+def is_manifest(path: str) -> bool:
+    """Cheap sniff: does ``path`` name a shard manifest (vs a .kgz zip)?
+    Reads only the first bytes — a .kgz starts with the zip magic, a
+    manifest is a JSON object carrying the format marker."""
+    try:
+        with open(path, "rb") as f:
+            head = f.read(4096)
+    except OSError:
+        return False
+    if not head.lstrip()[:1] == b"{":
+        return False
+    return MANIFEST_FORMAT.encode() in head

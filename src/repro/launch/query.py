@@ -48,13 +48,26 @@ def main() -> None:
 
     if args.trace:
         obs.enable_tracing()
-    store = persist.open_store(args.kg)
-    print(
-        f"[query] {store.n_triples} triples, {store.n_terms} terms "
-        f"from {args.kg}",
-        file=sys.stderr,
-    )
-    session = api.connect(store)
+    if persist.is_manifest(args.kg):
+        # a sharded KG: connect() opens every shard behind the
+        # scatter/gather session; --bench still needs one store, so
+        # point it at shard 0
+        manifest = persist.load_manifest(args.kg)
+        store = persist.open_store(manifest["shards"][0]["abs_path"])
+        session = api.connect(args.kg)
+        print(
+            f"[query] {manifest['dictionary']['n_triples']} triples across "
+            f"{manifest['n_shards']} shards from {args.kg}",
+            file=sys.stderr,
+        )
+    else:
+        store = persist.open_store(args.kg)
+        print(
+            f"[query] {store.n_triples} triples, {store.n_terms} terms "
+            f"from {args.kg}",
+            file=sys.stderr,
+        )
+        session = api.connect(store)
 
     if args.query:
         text = " . ".join(args.query)

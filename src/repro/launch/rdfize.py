@@ -38,6 +38,14 @@ def main() -> None:
     ap.add_argument("--emit", default="nt", choices=("nt", "kgz"),
                     help="output format: N-Triples text or a queryable "
                          "repro.kg .kgz snapshot")
+    ap.add_argument("--shards", type=int, default=0, metavar="N",
+                    help="with --emit kgz: partition the KG by subject "
+                         "hash into N shard stores plus a manifest at "
+                         "--out (serve it with launch.serve, query it "
+                         "with repro.api.connect)")
+    ap.add_argument("--shard-workers", type=int, default=0, metavar="M",
+                    help="build shard stores across M spawned worker "
+                         "processes (default: serial in-process)")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="record a Chrome trace-event JSON of the run "
                          "(per-block read/project/encode spans with "
@@ -73,8 +81,26 @@ def main() -> None:
             f"phi={int(st.phi_optimized()):>12d} "
             f"phi_naive={int(st.phi_naive()):>14d}"
         )
+    if args.shards and args.emit != "kgz":
+        ap.error("--shards needs --emit kgz (shard stores are .kgz snapshots)")
     if args.out:
-        if args.emit == "kgz":
+        if args.emit == "kgz" and args.shards:
+            from repro.shard.ingest import shard_store
+
+            with obs.span("emit_sharded", cat="rdfize", out=args.out,
+                          shards=args.shards):
+                store = result.to_store()
+                manifest = shard_store(
+                    store, args.out, args.shards,
+                    workers=args.shard_workers,
+                )
+            sizes = ", ".join(
+                str(s["n_triples"]) for s in manifest["shards"]
+            )
+            print(f"[rdfize] wrote {store.n_triples}-triple sharded KG "
+                  f"({args.shards} shards: {sizes} triples) — manifest "
+                  f"at {args.out}")
+        elif args.emit == "kgz":
             from repro.kg import persist
 
             with obs.span("emit_kgz", cat="rdfize", out=args.out):

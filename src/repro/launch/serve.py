@@ -82,11 +82,36 @@ def main() -> None:
     if not args.kg:
         ap.error("provide --kg to serve, or --connect/--query for client mode")
     from repro import obs
-    from repro.kg.persist import open_store
+    from repro.kg.persist import is_manifest, open_store
     from repro.serve.server import KGServer
 
     if args.trace:
         obs.enable_tracing()
+
+    if is_manifest(args.kg):
+        # a shard manifest: spawn the shard servers in-process and front
+        # them with the scatter/gather coordinator — same wire protocol,
+        # so client mode and every existing tool keep working
+        from repro.shard.coordinator import Coordinator
+
+        signal.signal(signal.SIGTERM, signal.default_int_handler)
+        coord = Coordinator.from_manifest(
+            args.kg,
+            host=args.host,
+            port=args.port,
+            read_only=args.read_only,
+            max_rows=args.max_rows,
+            max_batch=args.max_batch,
+            linger_ms=args.linger_ms,
+        )
+        try:
+            coord.serve_forever()
+        finally:
+            if args.trace:
+                n_ev = obs.save_trace(args.trace)
+                print(f"[serve] wrote {n_ev}-event trace to {args.trace}",
+                      file=sys.stderr)
+        return
     from repro.kg.persist import KIND_DELTA, load_chain, peek_meta
     from repro.live.delta import LiveStore
 

@@ -614,3 +614,77 @@ def _validate(q: SelectQuery) -> None:
     for v, _asc in q.order_by:
         if v not in out:
             raise ValueError(f"ORDER BY key {v} is not a projected variable")
+
+
+# ---------------------------------------------------------------------------
+# serializer — SelectQuery -> parseable query text
+# ---------------------------------------------------------------------------
+
+
+def _operand_text(op: Operand) -> str:
+    if isinstance(op, Var):
+        return op.name
+    if isinstance(op, NumConst):
+        return repr(op.value)
+    return op.term
+
+
+def expr_text(e: Expr) -> str:
+    """Serialize a filter expression back to FILTER grammar.  Fully
+    parenthesized, so ``parse_select(to_text(q))`` rebuilds the same tree
+    regardless of precedence."""
+    if isinstance(e, Cmp):
+        return f"{_operand_text(e.lhs)} {e.op} {_operand_text(e.rhs)}"
+    if isinstance(e, Bound):
+        return f"bound({e.var.name})"
+    if isinstance(e, Not):
+        return f"!({expr_text(e.expr)})"
+    op = "&&" if isinstance(e, And) else "||"
+    return f"({expr_text(e.lhs)}) {op} ({expr_text(e.rhs)})"
+
+
+def _bgp_text(pats) -> str:
+    return " . ".join(" ".join(p.slots) for p in pats)
+
+
+def to_text(q: SelectQuery) -> str:
+    """Serialize a query back to SPARQL-lite text; round-trips through
+    :func:`parse_select` to an equal :class:`SelectQuery`.  The shard
+    coordinator uses this to rewrite queries before scattering them
+    (e.g. an aggregate query shards with ORDER BY / LIMIT stripped, so
+    partial groups stay complete for the re-aggregating merge)."""
+    sel = "*"
+    if q.select is not None:
+        parts = []
+        for v in q.select:
+            if q.agg is not None and v == q.agg.alias:
+                cv = q.agg.var if q.agg.var is not None else "*"
+                parts.append(f"(COUNT({cv}) AS {q.agg.alias})")
+            else:
+                parts.append(v)
+        sel = " ".join(parts)
+    body = []
+    if q.patterns:
+        body.append(_bgp_text(q.patterns))
+    if q.unions:
+        body.append(
+            " UNION ".join("{ " + _bgp_text(arm) + " }" for arm in q.unions)
+        )
+    for group in q.optionals:
+        body.append("OPTIONAL { " + _bgp_text(group) + " }")
+    for f in q.filters:
+        body.append(f"FILTER({expr_text(f)})")
+    text = "SELECT "
+    if q.distinct:
+        text += "DISTINCT "
+    text += sel + " WHERE { " + " ".join(body) + " }"
+    if q.group_by:
+        text += " GROUP BY " + " ".join(q.group_by)
+    if q.order_by:
+        keys = " ".join(
+            (f"ASC({v})" if asc else f"DESC({v})") for v, asc in q.order_by
+        )
+        text += " ORDER BY " + keys
+    if q.limit is not None:
+        text += f" LIMIT {q.limit}"
+    return text

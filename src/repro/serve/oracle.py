@@ -42,39 +42,38 @@ def _decoded_triples(store: TripleStore) -> list[tuple[str, str, str]]:
     ]
 
 
-def _match_bgp(
-    triples: list[tuple[str, str, str]], patterns: tuple[TriplePattern, ...]
+def match_pattern(
+    triples: list[tuple[str, str, str]], pat: TriplePattern
 ) -> list[dict[str, str]]:
-    """Brute-force conjunctive matching: every pattern against every triple,
-    then pairwise compatible merge."""
-
-    def match_one(pat: TriplePattern) -> list[dict[str, str]]:
-        out = []
-        for t in triples:
-            env: dict[str, str] | None = {}
-            for term, value in zip(pat.slots, t):
-                if term.startswith("?"):
-                    if env.get(term, value) != value:
-                        env = None
-                        break
-                    env[term] = value
-                elif term != value:
+    """One pattern against every triple: the solution mappings (variable ->
+    rendered term), one per matching triple."""
+    out = []
+    for t in triples:
+        env: dict[str, str] | None = {}
+        for term, value in zip(pat.slots, t):
+            if term.startswith("?"):
+                if env.get(term, value) != value:
                     env = None
                     break
-            if env is not None:
-                out.append(env)
-        return out
+                env[term] = value
+            elif term != value:
+                env = None
+                break
+        if env is not None:
+            out.append(env)
+    return out
 
-    solutions: list[dict[str, str]] = [{}]
-    for pat in patterns:
-        rows = match_one(pat)
-        solutions = [
-            {**env, **row}
-            for env in solutions
-            for row in rows
-            if all(env.get(v, row[v]) == row[v] for v in row)
-        ]
-    return solutions
+
+def _join_envs(
+    solutions: list[dict[str, str]], rows: list[dict[str, str]]
+) -> list[dict[str, str]]:
+    """Pairwise compatible merge (the brute-force conjunctive join)."""
+    return [
+        {**env, **row}
+        for env in solutions
+        for row in rows
+        if all(env.get(v, row[v]) == row[v] for v in row)
+    ]
 
 
 def _is_literal(term: str | None) -> bool:
@@ -182,25 +181,36 @@ def _orderby_cell_key(cell):
     return (2, 0.0, (_body(cell), cell))
 
 
-def oracle_select(store: TripleStore, q: A.SelectQuery) -> list[tuple]:
-    """Evaluate ``q`` naively; rows are tuples of rendered terms (``None``
-    for unbound, plain ints for COUNT columns) over ``q.out_vars()``,
-    deterministically sorted, with GROUP BY / DISTINCT / ORDER BY / LIMIT
-    applied — directly comparable to ``BatchResult.rows(i)``."""
-    triples = _decoded_triples(store)
-    sols = _match_bgp(triples, q.patterns) if q.patterns else [{}]
+def combine_pattern_solutions(
+    q: A.SelectQuery, pattern_sols: "list[list[dict[str, str]]]"
+) -> list[tuple]:
+    """Everything past per-pattern matching: join the required BGP, fold
+    UNION arms, left-join OPTIONAL groups, filter, group/aggregate,
+    project, dedupe, order and limit.  ``pattern_sols`` holds each
+    pattern's solution mappings, aligned with ``q.all_patterns()`` order.
+
+    Factored out of :func:`oracle_select` because the shard coordinator
+    reuses it: a query whose patterns do not share one subject cannot be
+    answered by scattering the whole query (a solution's triples may span
+    shards), but each *pattern's* matches partition cleanly — so the
+    coordinator gathers per-pattern solutions from every shard and
+    combines them here, host-side, with exactly the oracle's semantics."""
+    it = iter(pattern_sols)
+    sols: list[dict[str, str]] = [{}]
+    for _pat in q.patterns:
+        sols = _join_envs(sols, next(it))
     if q.unions:
         arm_sols: list[dict[str, str]] = []
         for arm in q.unions:
-            arm_sols.extend(_match_bgp(triples, arm))
-        sols = [
-            {**env, **row}
-            for env in sols
-            for row in arm_sols
-            if all(env.get(v, row[v]) == row[v] for v in row)
-        ]
+            asols: list[dict[str, str]] = [{}]
+            for _pat in arm:
+                asols = _join_envs(asols, next(it))
+            arm_sols.extend(asols)
+        sols = _join_envs(sols, arm_sols)
     for group in q.optionals:
-        gsols = _match_bgp(triples, group)
+        gsols: list[dict[str, str]] = [{}]
+        for _pat in group:
+            gsols = _join_envs(gsols, next(it))
         joined: list[dict[str, str]] = []
         for env in sols:
             hits = [
@@ -255,3 +265,14 @@ def oracle_select(store: TripleStore, q: A.SelectQuery) -> list[tuple]:
     if q.limit is not None:
         rows = rows[: q.limit]
     return rows
+
+
+def oracle_select(store: TripleStore, q: A.SelectQuery) -> list[tuple]:
+    """Evaluate ``q`` naively; rows are tuples of rendered terms (``None``
+    for unbound, plain ints for COUNT columns) over ``q.out_vars()``,
+    deterministically sorted, with GROUP BY / DISTINCT / ORDER BY / LIMIT
+    applied — directly comparable to ``BatchResult.rows(i)``."""
+    triples = _decoded_triples(store)
+    return combine_pattern_solutions(
+        q, [match_pattern(triples, pat) for pat in q.all_patterns()]
+    )

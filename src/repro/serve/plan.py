@@ -901,3 +901,39 @@ def encode_scan_consts(
             tid = store.term_id(pat.slots[pos])
             out[i, pos] = -2 if tid is None else tid
     return out
+
+
+# ---------------------------------------------------------------------------
+# shard routing — which shards can answer a query (repro.shard coordinator)
+# ---------------------------------------------------------------------------
+
+
+def routing_subject(q: A.SelectQuery) -> str | None:
+    """The rendered constant subject every pattern of ``q`` is anchored on,
+    or ``None``.  When every pattern (required, UNION arms, OPTIONAL
+    groups) reads the *same constant* subject, every solution's matched
+    triples share that subject — so under subject-hash partitioning the
+    whole query lives on exactly one shard and the coordinator routes it
+    there instead of scattering."""
+    subjects = {p.slots[0] for p in q.all_patterns()}
+    if len(subjects) == 1:
+        s = next(iter(subjects))
+        if not s.startswith("?"):
+            return s
+    return None
+
+
+def colocated_subjects(q: A.SelectQuery) -> bool:
+    """True when every solution of ``q`` matches triples that all share one
+    subject value — the condition under which scatter/gather is exact:
+    each solution is found on the one shard holding that subject, and on
+    no other (so the gathered union is the unsharded bag).  Holds for a
+    single pattern (one triple per solution) and for star shapes where
+    every pattern reads the same subject variable or the same constant.
+    Chains (``?s <p> ?o . ?o <q> ?r``) join across subjects and are NOT
+    colocated — the coordinator answers them by gathering each pattern's
+    matches and combining host-side instead."""
+    pats = q.all_patterns()
+    if len(pats) <= 1:
+        return True
+    return len({p.slots[0] for p in pats}) == 1

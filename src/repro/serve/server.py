@@ -90,6 +90,25 @@ from repro.serve.exec import Executor, get_executor, plan_label
 from repro.serve.values import value_table
 
 
+# per-signature observability is bounded: beyond this many distinct plan
+# signatures, new ones collapse into one "overflow" bucket so an
+# adversarial (or just very heterogeneous) query stream cannot grow the
+# `metrics` snapshot and the legend without bound
+MAX_TRACKED_SIGS = 64
+
+
+def track_sig(examples: dict[str, str], label: str, text: str) -> str:
+    """Register ``label`` in the signature legend (first example query
+    wins) and return the label to tag metrics with — ``"overflow"`` once
+    the legend is full.  Shared by the server and the shard coordinator."""
+    if label in examples:
+        return label
+    if len(examples) >= MAX_TRACKED_SIGS:
+        return "overflow"
+    examples[label] = text
+    return label
+
+
 @dataclasses.dataclass
 class _Pending:
     query: algebra.SelectQuery | None
@@ -559,9 +578,9 @@ class KGServer:
                 )
         try:
             plan = self.executor.plan(group[0].query)
-            label = plan_label(plan.sig)
-            if label not in self._sig_examples:
-                self._sig_examples[label] = group[0].text
+            label = track_sig(
+                self._sig_examples, plan_label(plan.sig), group[0].text
+            )
             # snapshot the overlay (copy-on-write): this group answers over
             # exactly the mutations applied before it, whatever lands next
             view = self.live.view() if self.live is not None else None

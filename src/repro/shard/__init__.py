@@ -1,0 +1,34 @@
+"""repro.shard — hash-partitioned stores, scatter/gather serving, sharded
+ingestion.
+
+A sharded KG is N ordinary ``.kgz`` stores (one term dictionary each)
+plus one JSON manifest pinning the partition rule
+(crc32 of the rendered subject term, modulo N — see
+:mod:`repro.shard.partition` and the manifest format in
+:mod:`repro.kg.persist`).  Build one with ``rdfize --shards N`` or
+:func:`repro.shard.ingest.ingest_sharded`; query it through
+``repro.api.connect(<manifest>)`` (in-process) or a
+:class:`repro.shard.coordinator.Coordinator` (the NDJSON server face,
+``launch.serve --kg <manifest>``).  The merge that makes shard answers
+byte-identical to the unsharded engine lives in
+:mod:`repro.shard.merge`.
+"""
+
+from repro.shard.coordinator import (  # noqa: F401
+    Coordinator,
+    ShardGroup,
+    ShardLink,
+    ShardSession,
+    connect_shard_group,
+    open_shard_group,
+    spawn_shard_servers,
+)
+from repro.shard.ingest import ingest_sharded, shard_store  # noqa: F401
+from repro.shard.merge import choose_dispatch  # noqa: F401
+from repro.shard.partition import (  # noqa: F401
+    PARTITION_SPEC,
+    build_shard_stores,
+    partition_store,
+    partition_triples,
+    shard_of_term,
+)

@@ -1,0 +1,203 @@
+"""Scatter/gather serving cost across shard counts (``BENCH_shard.json``).
+
+Two query classes through the in-process :class:`~repro.shard.coordinator.
+ShardGroup` (``_LocalBackend`` per shard — the ``api.connect(<manifest>)``
+path, no sockets, so the numbers isolate the dispatch/merge overhead from
+wire costs), each at shard counts 1 / 2 / 4 plus the unsharded
+:class:`~repro.api.LocalSession` baseline:
+
+* ``routed_single``  — ``<s> <p> ?o`` with the subject bound: the router
+  hashes the subject and dispatches to exactly **one** shard (asserted via
+  the ``shard.shard_requests`` counter — ``fanout_per_query`` must be 1.0),
+  so its per-query cost should track the unsharded baseline;
+* ``scatter_bgp3``   — a 3-pattern star BGP anchored at a constant object:
+  every shard executes, the gatherer merges in global term order, so its
+  per-query cost pays one dispatch per shard plus the merge.
+
+Every query is derived from an existing triple (non-empty answers), with
+constants varied per query and one plan signature per class — the
+coordinator's steady state.  A representative query per class is answered
+on every config and checked byte-identical against the baseline, so the
+bench doubles as a parity smoke.
+
+The report's ``queries_per_s`` / ``latency_p99_ms`` leaves are gated by
+``benchmarks/compare.py`` once ``BENCH_shard.json`` is committed; the
+``criteria`` section records the two acceptance ratios directly
+(scatter bgp3 at 2 shards within 2.5x of the single-store per-query
+cost, routed within 25% of the unsharded baseline).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.api import LocalSession
+from repro.kg.store import TripleStore
+from repro.obs import Histogram, MetricsRegistry
+
+SHARD_COUNTS = (1, 2, 4)
+
+
+def _workload(store: TripleStore, n_queries: int, seed: int):
+    """(routed texts, scatter texts): non-empty queries with varied
+    constants and one plan signature per class."""
+    rng = np.random.default_rng(seed)
+    ids, counts = np.unique(np.asarray(store.p), return_counts=True)
+    if len(ids) < 3:
+        raise ValueError("shard bench needs >= 3 predicates in the store")
+    order = np.argsort(counts)
+    p0, p1, p2 = (int(ids[i]) for i in order[-3:])
+    t0, t1, t2 = (store.decode_term(p) for p in (p0, p1, p2))
+
+    rows0 = np.nonzero(np.asarray(store.p) == p0)[0]
+    pick = rows0[rng.integers(0, len(rows0), n_queries)]
+    routed = [
+        f"SELECT ?o WHERE {{ {store.decode_term(int(store.s[i]))} {t0} ?o }}"
+        for i in pick
+    ]
+    anchors = store.o[rows0[rng.integers(0, len(rows0), n_queries)]]
+    scatter = [
+        f"SELECT * WHERE {{ ?m {t0} {store.decode_term(int(o))} . "
+        f"?m {t1} ?b . ?m {t2} ?c }}"
+        for o in anchors
+    ]
+    return routed, scatter
+
+
+N_PASSES = 2
+
+
+def _time_queries(session, texts: "list[str]") -> dict:
+    """Per-query wall/latency through a session, one query per call (the
+    interactive regime the acceptance ratios are stated in).  The warm-up
+    replays the full workload once so compilation and the executor's
+    capacity feedback converge on every shard before the timed passes —
+    otherwise a late capacity recompile on one shard pollutes the p99.
+    Each query is timed over ``N_PASSES`` passes and its best lap kept:
+    one-off scheduler/GC stalls land in *some* lap of *some* pass, and a
+    128-sample p99 is two bad laps away from garbage otherwise."""
+    for text in texts:
+        session.query(text)
+    best = [float("inf")] * len(texts)
+    for _ in range(N_PASSES):
+        for j, text in enumerate(texts):
+            d0 = time.perf_counter_ns()
+            session.query(text)
+            lap = (time.perf_counter_ns() - d0) / 1e6
+            if lap < best[j]:
+                best[j] = lap
+    lat = Histogram()
+    for lap in best:
+        lat.observe(lap)
+    wall = sum(best) / 1e3
+    return {
+        "n_queries": len(texts),
+        "wall_s": wall,
+        "queries_per_s": len(texts) / wall,
+        "latency_p50_ms": lat.percentile(50),
+        "latency_p99_ms": lat.percentile(99),
+        "latency_max_ms": lat.max,
+    }
+
+
+def _sharded_session(store: TripleStore, n_shards: int):
+    """An in-process ShardSession over ``n_shards`` partitions of
+    ``store``, with its own registry so fan-out counters are per-config."""
+    from repro.shard.coordinator import ShardGroup, ShardSession, _LocalBackend
+    from repro.shard.partition import build_shard_stores
+
+    registry = MetricsRegistry()
+    backends = [
+        _LocalBackend(LocalSession(s)) for s in build_shard_stores(store, n_shards)
+    ]
+    return ShardSession(ShardGroup(backends, registry=registry)), registry
+
+
+def bench_shard(
+    store: TripleStore,
+    shard_counts: tuple[int, ...] = SHARD_COUNTS,
+    n_queries: int = 128,
+    seed: int = 0,
+) -> dict:
+    """Time both classes on the unsharded baseline and every shard count;
+    returns a json-ready report keyed ``{class: {configs: {...}}}`` plus
+    the two acceptance ratios under ``criteria``."""
+    routed_texts, scatter_texts = _workload(store, n_queries, seed)
+    classes = {
+        "routed_single": routed_texts,
+        "scatter_bgp3": scatter_texts,
+    }
+    report: dict = {
+        "n_triples": int(store.n_triples),
+        "n_terms": int(store.n_terms),
+        "shard_counts": list(shard_counts),
+        "classes": {
+            name: {"query": texts[0], "configs": {}}
+            for name, texts in classes.items()
+        },
+    }
+
+    base = LocalSession(store)
+    expected = {
+        name: (sorted(base.query(texts[0]).rows), base.query(texts[0]).n_total)
+        for name, texts in classes.items()
+    }
+    for name, texts in classes.items():
+        leaf = _time_queries(base, texts)
+        leaf["fanout_per_query"] = 1.0
+        report["classes"][name]["configs"]["unsharded"] = leaf
+
+    for n in shard_counts:
+        session, registry = _sharded_session(store, n)
+        try:
+            for name, texts in classes.items():
+                got = session.query(texts[0])
+                assert (sorted(got.rows), got.n_total) == expected[name], (
+                    f"{name} diverged at {n} shards"
+                )
+                req0 = registry.counter("shard.shard_requests").value
+                leaf = _time_queries(session, texts)
+                reqs = registry.counter("shard.shard_requests").value - req0
+                # the warm-up pass fans out like the N_PASSES timed ones
+                leaf["fanout_per_query"] = reqs / ((N_PASSES + 1) * len(texts))
+                report["classes"][name]["configs"][f"shards{n}"] = leaf
+            report.setdefault("fanout", {})[f"shards{n}"] = {
+                "routed": registry.counter("shard.routed").value,
+                "scattered": registry.counter("shard.scattered").value,
+                "decomposed": registry.counter("shard.decomposed").value,
+                "shard_requests": registry.counter("shard.shard_requests").value,
+            }
+            if n > 1:
+                routed_fanout = report["classes"]["routed_single"]["configs"][
+                    f"shards{n}"
+                ]["fanout_per_query"]
+                assert routed_fanout == 1.0, (
+                    f"routed queries touched {routed_fanout} shards at N={n}"
+                )
+        finally:
+            session.close()
+
+    cfg = report["classes"]
+    base_cost = {
+        name: cfg[name]["configs"]["unsharded"]["wall_s"]
+        / cfg[name]["configs"]["unsharded"]["n_queries"]
+        for name in classes
+    }
+    if 2 in shard_counts:
+        two = {
+            name: cfg[name]["configs"]["shards2"]["wall_s"]
+            / cfg[name]["configs"]["shards2"]["n_queries"]
+            for name in classes
+        }
+        report["criteria"] = {
+            # acceptance: <= 2.5x single-store per-query cost at 2 shards
+            "scatter_bgp3_shards2_cost_ratio":
+                two["scatter_bgp3"] / base_cost["scatter_bgp3"],
+            # acceptance: within 25% of the unsharded baseline throughput
+            "routed_single_shards2_qps_frac":
+                cfg["routed_single"]["configs"]["shards2"]["queries_per_s"]
+                / cfg["routed_single"]["configs"]["unsharded"]["queries_per_s"],
+        }
+    return report
