@@ -26,8 +26,15 @@ def main() -> None:
         print(f"mapping written to {mapping_path}:")
         print("\n".join(serializer.to_turtle(tb.doc).splitlines()[:12]), "\n...")
 
-        # 2. Parse the RML document back and create the knowledge graph.
+        # 2. Parse the RML document back, look at the mapping planner's
+        #    decisions (what `rdfize --explain-mapping` prints: kept vs
+        #    pruned columns, factored shared terms, rule groups), then
+        #    create the knowledge graph.
         doc = parser.parse_file(mapping_path)
+        from repro import api
+
+        print("\nmapping plan (rdfize --explain-mapping):")
+        print(api.explain_mapping(doc, data_root=tmp))
         result = create_kg(doc, data_root=tmp, engine="optimized")
 
         print(f"\ncreated {result.n_triples} unique RDF triples "

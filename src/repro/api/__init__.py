@@ -332,3 +332,48 @@ def connect(
     if read_only:
         return LocalSession(persist.open_store(target), read_only=True)
     return LocalSession(persist.load_chain(target))
+
+
+def _peek_schemas(plan, data_root: str) -> "dict[str, tuple[str, ...]]":
+    """Header peek for fixed-schema CSV/TSV sources on disk, so the
+    explain tree can show *pruned* columns, not just kept ones.  Sources
+    that are missing, globbed, or schemaless (JSON) are simply omitted —
+    explain must work before the data exists."""
+    import csv
+
+    from repro.rml.model import parse_source_key
+    from repro.stream.datasource import is_sharded_path
+
+    schemas: dict[str, tuple[str, ...]] = {}
+    for skey in plan.sources:
+        fmt, path, _ = parse_source_key(skey)
+        if fmt not in ("csv", "tsv") or is_sharded_path(path):
+            continue
+        full = path if os.path.isabs(path) else os.path.join(data_root, path)
+        if not os.path.exists(full):
+            continue
+        with open(full, newline="", encoding="utf-8") as f:
+            delim = "\t" if fmt == "tsv" else ","
+            header = next(csv.reader(f, delimiter=delim), None)
+        if header:
+            schemas[skey] = tuple(header)
+    return schemas
+
+
+def explain_mapping(mapping, data_root: str = ".") -> str:
+    """Render the mapping planner's decisions as a stable human-readable
+    tree — per-source kept/pruned columns, factored shared terms, join
+    indexes, and the rule-group execution DAG — without running the
+    engine.  ``mapping`` is a :class:`~repro.rml.model.MappingDocument`
+    or a path to an RML ``.ttl`` file; when the CSV/TSV sources exist
+    under ``data_root`` their headers are peeked so pruned columns are
+    listed explicitly.  This is ``rdfize --explain-mapping``."""
+    from repro.rml import parser
+    from repro.rml.plan import build_plan, render_explain
+
+    if isinstance(mapping, (str, os.PathLike)):
+        doc = parser.parse_file(os.fspath(mapping))
+    else:
+        doc = mapping
+    plan = build_plan(doc)
+    return render_explain(plan, schemas=_peek_schemas(plan, data_root))

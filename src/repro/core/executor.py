@@ -216,6 +216,18 @@ class KGResult:
         return out
 
 
+def _plan_gauges(mplan) -> None:
+    """Publish the mapping plan's shape into ``repro.obs`` (plan.* rows
+    in the metrics catalog)."""
+    from repro.obs import get_registry
+
+    reg = get_registry()
+    reg.gauge("plan.groups").set(len(mplan.groups))
+    reg.gauge("plan.sources").set(len(mplan.sources))
+    reg.gauge("plan.shared_terms").set(len(mplan.shared))
+    reg.gauge("plan.rules").set(len(mplan.exec_plan.ops))
+
+
 def _sources_by_key(doc: MappingDocument) -> dict:
     """planner source_key -> LogicalSource (keys match the planned ops)."""
     return {
@@ -244,6 +256,11 @@ class EngineConfig:
     stream: bool = False
     block_rows: int = 1 << 14
     prefetch_blocks: int = 2
+    # mapping-level planning (repro.rml.plan): projection pushdown into
+    # the streamed read, FunMap-style shared-term factoring, and
+    # group-by-group rule execution.  Output is byte-identical either
+    # way (property-tested); False keeps the unplanned reference path.
+    mapping_plan: bool = True
 
 
 class Engine:
@@ -270,6 +287,12 @@ class Engine:
         maps source key ('csv:child.csv') -> columnar dict."""
         t0 = time.perf_counter()
         cfg = self.config
+        mplan = None
+        if cfg.mapping_plan:
+            from repro.rml.plan import build_plan
+
+            mplan = build_plan(doc)
+            _plan_gauges(mplan)
         if cfg.stream:
             if cfg.engine != "optimized":
                 raise ValueError(
@@ -278,8 +301,8 @@ class Engine:
                 )
             if cfg.block_rows < 1:
                 raise ValueError(f"block_rows must be >= 1, got {cfg.block_rows}")
-            return self._run_stream(doc, data_root, tables, t0)
-        exec_plan = planner.plan(doc)
+            return self._run_stream(doc, data_root, tables, t0, mplan=mplan)
+        exec_plan = mplan.exec_plan if mplan is not None else planner.plan(doc)
         dct = Dictionary()
         cache = SourceCache(data_root)
         sources_by_key = _sources_by_key(doc)
@@ -352,21 +375,42 @@ class Engine:
             pred_candidates[pred] = total
             stats[pred] = PredicateStats(kind=kind)
 
-        # ---- run the ops
+        # ---- run the ops: group-by-group along the mapping plan's DAG
+        # when planning is on (groups are disjoint in predicates and
+        # sources, so this only reorders work), else one flat pass
         triples_out: dict[str, dict[str, list[np.ndarray]]] = {}
-        if cfg.engine == "optimized":
-            self._run_optimized(
-                exec_plan, values_for, indexes, pred_candidates, op_spans,
-                stats, triples_out, dct,
-            )
+        if mplan is not None:
+            schedule = [
+                (g, [(p, exec_plan.by_predicate[p]) for p in g.predicates])
+                for g in mplan.groups
+            ]
         else:
-            self._run_naive(
-                exec_plan, values_for, indexes, op_spans, stats, triples_out, dct
-            )
+            schedule = [(None, list(exec_plan.by_predicate.items()))]
+        from repro import obs
 
+        for g, pred_items in schedule:
+            span_args = {"group": g.index} if g is not None else {}
+            with obs.span("plan_group", cat="plan", **span_args):
+                if cfg.engine == "optimized":
+                    self._run_optimized(
+                        exec_plan, values_for, indexes, pred_candidates,
+                        op_spans, stats, triples_out, dct,
+                        pred_items=pred_items,
+                    )
+                else:
+                    self._run_naive(
+                        exec_plan, values_for, indexes, op_spans, stats,
+                        triples_out, dct, pred_items=pred_items,
+                    )
+
+        # emit in the op plan's predicate order regardless of group
+        # scheduling: the written KG is byte-identical planner-on/off
         final = {
-            pred: {k: np.concatenate(v) if v else np.zeros(0, np.int32) for k, v in t.items()}
-            for pred, t in triples_out.items()
+            pred: {
+                k: np.concatenate(v) if v else np.zeros(0, np.int32)
+                for k, v in triples_out[pred].items()
+            }
+            for pred in exec_plan.by_predicate
         }
         return KGResult(
             dictionary=dct,
@@ -433,10 +477,12 @@ class Engine:
 
     def _run_optimized(
         self, exec_plan, values_for, indexes, pred_candidates, op_spans,
-        stats, triples_out, dct: Dictionary,
+        stats, triples_out, dct: Dictionary, pred_items=None,
     ):
         cfg = self.config
-        for pred, op_idxs in exec_plan.by_predicate.items():
+        if pred_items is None:
+            pred_items = exec_plan.by_predicate.items()
+        for pred, op_idxs in pred_items:
             cap = next_pow2(int(pred_candidates[pred] / cfg.load_factor) + 16)
             while True:  # overflow -> double capacity and replay the predicate
                 table = hashset.make(cap)
@@ -488,7 +534,7 @@ class Engine:
 
     # -- streamed optimized engine (repro.stream) ------------------------------
 
-    def _run_stream(self, doc, data_root, tables, t0) -> KGResult:
+    def _run_stream(self, doc, data_root, tables, t0, mplan=None) -> KGResult:
         """Out-of-core KG creation.  Every source flows block-at-a-time
         through a lazy ``read -> project -> derive -> encode -> batch``
         Dataset; only dictionary-encoded int32 ids (and the PJTT indexes
@@ -496,15 +542,25 @@ class Engine:
         O(block_rows) per raw column regardless of source size.  Sized like
         the eager engine (exact span stats, streamed), with the same
         overflow-replay fallback — a replay re-reads the source rather than
-        re-using a cached table."""
+        re-using a cached table.
+
+        With a :class:`~repro.rml.plan.MappingPlan` (``mapping_plan=True``)
+        three planner-driven optimizations engage, none of which changes
+        the produced KG: projections are pushed into the readers (pruned
+        columns never materialize), shared term columns are evaluated once
+        per source scan and served from an int32 cache, and the rule
+        groups run as a DAG — each group's factored cache and PJTT indexes
+        live only for that group."""
         import os
 
+        from repro import obs
         from repro.stream import Dataset, read_source
         from repro.stream.block import Block
         from repro.stream.datasource import is_sharded_path
 
         cfg = self.config
-        exec_plan = planner.plan(doc)
+        exec_plan = mplan.exec_plan if mplan is not None else planner.plan(doc)
+        reg = obs.get_registry()
         dct = Dictionary()
         block_rows = cfg.block_rows
         # block_rows bounds I/O granularity; batch_size still bounds the
@@ -615,124 +671,304 @@ class Engine:
                     f"source {skey!r}"
                 )
 
+        # ---- planner-on state: the factored shared-term cache.  Keyed
+        # (source_key, columns) like the eager path's value cache, holding
+        # the dictionary-encoded int32 value column of a term evaluated by
+        # >= 2 sites.  Filled per group, freed when the group completes.
+        value_cache: dict[tuple, np.ndarray] = {}
+
+        def build_factored(group) -> None:
+            """One streaming pass per source with shared terms: evaluate
+            and encode every factored term column of the group (FunMap's
+            pre-materialization, scoped to the group's lifetime)."""
+            per_src: dict[str, list[tuple]] = {}
+            for (skey, colset), _sh in mplan.shared.items():
+                if skey in group.sources:
+                    per_src.setdefault(skey, []).append(colset)
+            for skey, colsets in sorted(per_src.items()):
+                union_raw = tuple(
+                    dict.fromkeys(c for cols in colsets for c in cols)
+                )
+                ds = dataset_for(skey).project(
+                    *union_raw, fill=fill_of(skey), pushdown=True
+                )
+                chunks: dict[tuple, list] = {cols: [] for cols in colsets}
+                n = 0
+                for block in ds.iter_blocks(prefetch):
+                    for cols in colsets:
+                        chunks[cols].append(dct.encode(derived(block, cols)))
+                    n += block.n_rows
+                for cols in colsets:
+                    value_cache[(skey, cols)] = (
+                        np.concatenate(chunks[cols])
+                        if chunks[cols]
+                        else np.zeros(0, np.int32)
+                    )
+                row_counts[skey] = n
+
+        def op_blocks(op):
+            """Planner-on block stream for one op: slots whose term column
+            is in the factored cache are sliced from it; remaining slots
+            stream the source with the projection pushed into the read."""
+            slots: list[tuple[str, tuple]] = [("subj", tuple(op.subj_columns))]
+            if op.kind == "OJM":
+                slots.append(("jkey", (op.join_child_column,)))
+            elif op.kind in ("SOM", "ORM"):
+                slots.append(("obj", tuple(op.obj_columns)))
+            else:  # CLASS: constant object
+                slots.append(("obj", ()))
+            cached: dict[str, np.ndarray] = {}
+            uncached: list[tuple[str, tuple]] = []
+            for name, cols in slots:
+                if not cols:
+                    continue  # constant slot: zeros derived per block
+                arr = value_cache.get((op.source_key, cols))
+                if arr is not None:
+                    cached[name] = arr
+                else:
+                    uncached.append((name, cols))
+            if not uncached:
+                # fully factored (or all-constant): no re-read at all
+                if cached:
+                    length = len(next(iter(cached.values())))
+                else:
+                    length = row_counts.get(op.source_key)
+                    if length is None:
+                        length = dataset_for(op.source_key).count()
+                        row_counts[op.source_key] = length
+                for start in range(0, length, block_rows):
+                    end = min(start + block_rows, length)
+                    cols_out = {}
+                    for name, _cols in slots:
+                        if name in cached:
+                            cols_out[name] = cached[name][start:end]
+                        else:
+                            cols_out[name] = np.zeros(end - start, np.int32)
+                    reg.inc("plan.factored_rows", (end - start) * len(cached))
+                    yield Block(cols_out)
+                return
+            needed = tuple(
+                dict.fromkeys(c for _n, cols in uncached for c in cols)
+            )
+            ds = dataset_for(op.source_key).project(
+                *needed, fill=fill_of(op.source_key), pushdown=True
+            )
+            offset = 0
+            for block in ds.iter_blocks(prefetch):
+                m = block.n_rows
+                cols_out = {}
+                for name, cols in slots:
+                    if name in cached:
+                        cols_out[name] = cached[name][offset:offset + m]
+                    elif not cols:
+                        cols_out[name] = np.zeros(m, np.int32)
+                    else:
+                        cols_out[name] = dct.encode(derived(block, cols))
+                if cached:
+                    reg.inc("plan.factored_rows", m * len(cached))
+                offset += m
+                yield Block(cols_out)
+
         # ---- PJTT builds: stream the parent once; retain only int32 ids
         indexes: dict[str, tuple] = {}
         parent_counts: dict[str, int] = {}
         sorted_parent_keys: dict[str, np.ndarray] = {}
-        for pkey, (psrc, pcol, _ppat, pcols) in exec_plan.pjtt_builds.items():
-            needed = tuple(dict.fromkeys((pcol,) + tuple(pcols)))
 
-            def to_index_columns(block: Block, pcol=pcol, pcols=pcols) -> Block:
-                return Block(
-                    {"key": block.columns[pcol], "subj": derived(block, pcols)}
-                )
+        def build_pjtts(pjtt_items) -> None:
+            for pkey, (psrc, pcol, _ppat, pcols) in pjtt_items:
+                kc = value_cache.get((psrc, (pcol,)))
+                sc = value_cache.get((psrc, tuple(pcols)))
+                if kc is not None and (sc is not None or not pcols):
+                    # both columns already factored: build from the cache
+                    pkeys = kc
+                    psubj = (
+                        sc if sc is not None else np.zeros(len(kc), np.int32)
+                    )
+                    reg.inc("plan.factored_rows", 2 * len(pkeys))
+                else:
+                    needed = tuple(dict.fromkeys((pcol,) + tuple(pcols)))
 
-            ds = (
-                dataset_for(psrc)
-                .project(*needed, fill=fill_of(psrc))
-                .map_blocks(to_index_columns)
-                .encode(dct)
-            )
-            kchunks, schunks = [], []
-            for block in ds.iter_blocks(prefetch):
-                kchunks.append(block.columns["key"])
-                schunks.append(block.columns["subj"])
-            pkeys = np.concatenate(kchunks) if kchunks else np.zeros(0, np.int32)
-            psubj = np.concatenate(schunks) if schunks else np.zeros(0, np.int32)
-            kd, sd = jnp.asarray(pkeys), jnp.asarray(psubj)
-            if cfg.join_strategy == "hash":
-                indexes[pkey] = _build_hash(kd, sd)
-            else:
-                indexes[pkey] = _build_sorted(kd, sd)
-            parent_counts[pkey] = len(pkeys)
-            sorted_parent_keys[pkey] = np.sort(pkeys)
-            row_counts[psrc] = len(pkeys)
+                    def to_index_columns(
+                        block: Block, pcol=pcol, pcols=pcols
+                    ) -> Block:
+                        return Block(
+                            {
+                                "key": block.columns[pcol],
+                                "subj": derived(block, pcols),
+                            }
+                        )
+
+                    ds = dataset_for(psrc).project(
+                        *needed, fill=fill_of(psrc),
+                        pushdown=mplan is not None,
+                    )
+                    ds = ds.map_blocks(to_index_columns).encode(dct)
+                    kchunks, schunks = [], []
+                    for block in ds.iter_blocks(prefetch):
+                        kchunks.append(block.columns["key"])
+                        schunks.append(block.columns["subj"])
+                    pkeys = (
+                        np.concatenate(kchunks) if kchunks
+                        else np.zeros(0, np.int32)
+                    )
+                    psubj = (
+                        np.concatenate(schunks) if schunks
+                        else np.zeros(0, np.int32)
+                    )
+                kd, sd = jnp.asarray(pkeys), jnp.asarray(psubj)
+                if cfg.join_strategy == "hash":
+                    indexes[pkey] = _build_hash(kd, sd)
+                else:
+                    indexes[pkey] = _build_sorted(kd, sd)
+                parent_counts[pkey] = len(pkeys)
+                sorted_parent_keys[pkey] = np.sort(np.asarray(pkeys))
+                row_counts[psrc] = len(pkeys)
 
         # ---- sizing pre-pass: exact |N_p| and max span, streamed
         stats: dict[str, PredicateStats] = {}
         pred_candidates: dict[str, int] = {}
         op_spans: dict[int, tuple[int, int]] = {}
-        for pred, op_idxs in exec_plan.by_predicate.items():
-            total = 0
-            stats[pred] = PredicateStats(kind=exec_plan.ops[op_idxs[0]].kind)
-            for i in op_idxs:
-                op = exec_plan.ops[i]
-                if op.kind == "OJM":
-                    spk = sorted_parent_keys[op.pjtt_key]
-                    tot = mx = n = 0
-                    ds = (
-                        dataset_for(op.source_key)
-                        .project(op.join_child_column, fill=fill_of(op.source_key))
-                        .encode(dct)
-                    )
-                    for block in ds.iter_blocks(prefetch):
-                        ck = block.columns[op.join_child_column]
-                        cnt = np.searchsorted(spk, ck, side="right") - \
-                            np.searchsorted(spk, ck, side="left")
-                        if len(cnt):
-                            tot += int(cnt.sum())
-                            mx = max(mx, int(cnt.max()))
-                        n += block.n_rows
-                    row_counts[op.source_key] = n
-                    op_spans[i] = (tot, mx)
-                    total += tot
-                else:
-                    n = row_counts.get(op.source_key)
-                    if n is None:
-                        n = dataset_for(op.source_key).count()
-                        row_counts[op.source_key] = n
-                    op_spans[i] = (n, 1)
-                    total += n
-            pred_candidates[pred] = total
+
+        def size_predicates(pred_list) -> None:
+            for pred in pred_list:
+                op_idxs = exec_plan.by_predicate[pred]
+                total = 0
+                stats[pred] = PredicateStats(
+                    kind=exec_plan.ops[op_idxs[0]].kind
+                )
+                for i in op_idxs:
+                    op = exec_plan.ops[i]
+                    if op.kind == "OJM":
+                        spk = sorted_parent_keys[op.pjtt_key]
+                        ck_all = value_cache.get(
+                            (op.source_key, (op.join_child_column,))
+                        )
+                        if ck_all is not None:
+                            # factored child key: span stats with no re-read
+                            cnt = np.searchsorted(spk, ck_all, side="right") \
+                                - np.searchsorted(spk, ck_all, side="left")
+                            tot = int(cnt.sum()) if len(cnt) else 0
+                            mx = int(cnt.max()) if len(cnt) else 0
+                            row_counts[op.source_key] = len(ck_all)
+                        else:
+                            tot = mx = n = 0
+                            ds = (
+                                dataset_for(op.source_key)
+                                .project(
+                                    op.join_child_column,
+                                    fill=fill_of(op.source_key),
+                                    pushdown=mplan is not None,
+                                )
+                                .encode(dct)
+                            )
+                            for block in ds.iter_blocks(prefetch):
+                                ck = block.columns[op.join_child_column]
+                                cnt = np.searchsorted(spk, ck, side="right") \
+                                    - np.searchsorted(spk, ck, side="left")
+                                if len(cnt):
+                                    tot += int(cnt.sum())
+                                    mx = max(mx, int(cnt.max()))
+                                n += block.n_rows
+                            row_counts[op.source_key] = n
+                        op_spans[i] = (tot, mx)
+                        total += tot
+                    else:
+                        n = row_counts.get(op.source_key)
+                        if n is None:
+                            n = dataset_for(op.source_key).count()
+                            row_counts[op.source_key] = n
+                        op_spans[i] = (n, 1)
+                        total += n
+                pred_candidates[pred] = total
 
         # ---- run the ops, block-at-a-time
         triples_out: dict[str, dict[str, list[np.ndarray]]] = {}
-        for pred, op_idxs in exec_plan.by_predicate.items():
-            cap = next_pow2(int(pred_candidates[pred] / cfg.load_factor) + 16)
-            while True:  # overflow -> double capacity, re-stream the predicate
-                table = hashset.make(cap)
-                hi, lo = table.hi, table.lo
-                out = {k: [] for k in ("subj_pat", "subj_val", "obj_pat", "obj_val")}
-                st = stats[pred]
-                st.n_candidates = st.n_unique = st.n_parent = st.n_child = 0
-                overflow = False
-                for i in op_idxs:
-                    op = exec_plan.ops[i]
-                    pid = np.int32(dct.encode_scalar(op.predicate))
-                    spat = np.int32(dct.encode_scalar(op.subj_pattern))
-                    opat = np.int32(dct.encode_scalar(op.obj_pattern))
-                    idx = None
-                    K = 1
-                    if op.kind == "OJM":
-                        idx = indexes[op.pjtt_key]
-                        _tot, mx = op_spans[i]
-                        K = cfg.max_matches or max(int(mx), 1)
-                        st.n_parent += parent_counts[op.pjtt_key]
-                        st.n_child += row_counts[op.source_key]
-                    for block in op_dataset(op).iter_blocks(prefetch):
-                        for batch in pipeline.batches(block.columns, device_rows):
-                            hi, lo, ovf = self._consume_batch(
-                                op, spat, pid, opat, hi, lo, batch, idx, K, out, st
-                            )
-                            if ovf:
-                                overflow = True
+
+        def run_predicates(pred_list) -> None:
+            for pred in pred_list:
+                op_idxs = exec_plan.by_predicate[pred]
+                cap = next_pow2(int(pred_candidates[pred] / cfg.load_factor) + 16)
+                while True:  # overflow -> double capacity, re-stream
+                    table = hashset.make(cap)
+                    hi, lo = table.hi, table.lo
+                    out = {
+                        k: []
+                        for k in ("subj_pat", "subj_val", "obj_pat", "obj_val")
+                    }
+                    st = stats[pred]
+                    st.n_candidates = st.n_unique = st.n_parent = st.n_child = 0
+                    overflow = False
+                    for i in op_idxs:
+                        op = exec_plan.ops[i]
+                        pid = np.int32(dct.encode_scalar(op.predicate))
+                        spat = np.int32(dct.encode_scalar(op.subj_pattern))
+                        opat = np.int32(dct.encode_scalar(op.obj_pattern))
+                        idx = None
+                        K = 1
+                        if op.kind == "OJM":
+                            idx = indexes[op.pjtt_key]
+                            _tot, mx = op_spans[i]
+                            K = cfg.max_matches or max(int(mx), 1)
+                            st.n_parent += parent_counts[op.pjtt_key]
+                            st.n_child += row_counts[op.source_key]
+                        blocks = (
+                            op_blocks(op)
+                            if mplan is not None
+                            else op_dataset(op).iter_blocks(prefetch)
+                        )
+                        for block in blocks:
+                            for batch in pipeline.batches(
+                                block.columns, device_rows
+                            ):
+                                hi, lo, ovf = self._consume_batch(
+                                    op, spat, pid, opat, hi, lo, batch,
+                                    idx, K, out, st,
+                                )
+                                if ovf:
+                                    overflow = True
+                                    break
+                            if overflow:
                                 break
                         if overflow:
                             break
-                    if overflow:
+                    if not overflow:
+                        triples_out[pred] = out
                         break
-                if not overflow:
-                    triples_out[pred] = out
-                    break
-                cap *= 2
+                    cap *= 2
 
+        if mplan is None:
+            build_pjtts(exec_plan.pjtt_builds.items())
+            size_predicates(list(exec_plan.by_predicate))
+            run_predicates(list(exec_plan.by_predicate))
+        else:
+            # group-by-group along the DAG: factored cache and PJTT
+            # indexes are built at group entry and freed at group exit
+            for g in mplan.groups:
+                with obs.span("plan_group", cat="plan", group=g.index,
+                              rules=len(g.op_indices)):
+                    build_factored(g)
+                    build_pjtts(
+                        (pk, exec_plan.pjtt_builds[pk]) for pk in g.pjtt_keys
+                    )
+                    size_predicates(list(g.predicates))
+                    run_predicates(list(g.predicates))
+                for skey in g.sources:
+                    for key in [k for k in value_cache if k[0] == skey]:
+                        del value_cache[key]
+                for pk in g.pjtt_keys:
+                    indexes.pop(pk, None)
+                    sorted_parent_keys.pop(pk, None)
+
+        # emit in the op plan's predicate order regardless of group
+        # scheduling: the written KG is byte-identical planner-on/off
         final = {
             pred: {
                 k: np.concatenate(v) if v else np.zeros(0, np.int32)
-                for k, v in t.items()
+                for k, v in triples_out[pred].items()
             }
-            for pred, t in triples_out.items()
+            for pred in exec_plan.by_predicate
         }
+        stats = {pred: stats[pred] for pred in exec_plan.by_predicate}
         return KGResult(
             dictionary=dct,
             triples=final,
@@ -744,10 +980,13 @@ class Engine:
     # -- naive engine ----------------------------------------------------------
 
     def _run_naive(
-        self, exec_plan, values_for, indexes, op_spans, stats, triples_out, dct
+        self, exec_plan, values_for, indexes, op_spans, stats, triples_out,
+        dct, pred_items=None,
     ):
         cfg = self.config
-        for pred, op_idxs in exec_plan.by_predicate.items():
+        if pred_items is None:
+            pred_items = exec_plan.by_predicate.items()
+        for pred, op_idxs in pred_items:
             khis, klos, valids = [], [], []
             svs, ovs, spats, opats = [], [], [], []
             st = stats[pred]

@@ -3,7 +3,8 @@
     PYTHONPATH=src python -m repro.launch.rdfize \
         --mapping mappings.ttl --data-root data/ --out kg.nt \
         [--engine optimized|naive] [--join sorted|hash] \
-        [--stream] [--block-rows N] [--emit nt|kgz]
+        [--stream] [--block-rows N] [--emit nt|kgz] \
+        [--explain-mapping] [--no-mapping-plan]
 
 ``--emit kgz`` writes a queryable ``repro.kg`` triple-store snapshot
 (dictionary + SPO/POS/OSP indexes) instead of N-Triples text; serve it with
@@ -14,6 +15,15 @@ subsystem: sources are read in ``--block-rows``-row chunks through a lazy
 Dataset plan (read -> project -> encode -> batch) with bounded prefetch, so
 the KG can exceed host RAM.  Output is identical to the eager engine.
 
+Every run goes through the mapping-level planner (:mod:`repro.rml.plan`)
+unless ``--no-mapping-plan``: projections are pushed into the streamed
+reads, shared subject/join templates are evaluated once, and rules execute
+group-by-group along the plan's DAG.  ``--explain-mapping`` prints the
+planner's decisions as a tree — kept/pruned columns per source, factored
+terms, rule groups — and exits without building anything.  With
+``--shards N --shard-workers M`` and a multi-group plan, whole rule
+groups build in parallel worker processes before the shard stores do.
+
 Mirrors the paper's tool: parse the RML document, plan, execute with the
 PTT/PJTT operators, emit N-Triples, print the per-predicate φ statistics.
 """
@@ -21,6 +31,16 @@ PTT/PJTT operators, emit N-Triples, print the per-predicate φ statistics.
 from __future__ import annotations
 
 import argparse
+
+
+def _print_stats(stats) -> None:
+    for pred, st in stats.items():
+        print(
+            f"  {st.kind:5s} {pred.rsplit('/', 1)[-1]:30s} "
+            f"|N_p|={st.n_candidates:>9d} |S_p|={st.n_unique:>9d} "
+            f"phi={int(st.phi_optimized()):>12d} "
+            f"phi_naive={int(st.phi_naive()):>14d}"
+        )
 
 
 def main() -> None:
@@ -35,6 +55,14 @@ def main() -> None:
                     help="block-streamed out-of-core ingestion (repro.stream)")
     ap.add_argument("--block-rows", type=int, default=1 << 14,
                     help="rows per streamed block (with --stream)")
+    ap.add_argument("--explain-mapping", action="store_true",
+                    help="print the mapping planner's decisions (kept/"
+                         "pruned columns, factored terms, rule groups) "
+                         "and exit without building the KG")
+    ap.add_argument("--no-mapping-plan", action="store_true",
+                    help="disable the mapping-level planner (no "
+                         "projection pushdown, no shared-template "
+                         "factoring, single flat rule group)")
     ap.add_argument("--emit", default="nt", choices=("nt", "kgz"),
                     help="output format: N-Triples text or a queryable "
                          "repro.kg .kgz snapshot")
@@ -44,8 +72,9 @@ def main() -> None:
                          "--out (serve it with launch.serve, query it "
                          "with repro.api.connect)")
     ap.add_argument("--shard-workers", type=int, default=0, metavar="M",
-                    help="build shard stores across M spawned worker "
-                         "processes (default: serial in-process)")
+                    help="build rule groups, then shard stores, across M "
+                         "spawned worker processes (default: serial "
+                         "in-process)")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="record a Chrome trace-event JSON of the run "
                          "(per-block read/project/encode spans with "
@@ -56,11 +85,67 @@ def main() -> None:
     from repro.core.executor import create_kg
     from repro.rml import parser
 
+    if args.explain_mapping:
+        from repro import api
+
+        print(api.explain_mapping(args.mapping, data_root=args.data_root))
+        return
     if args.trace:
         obs.enable_tracing()
     with obs.span("parse_mapping", cat="rdfize", path=args.mapping):
         doc = parser.parse_file(args.mapping)
     print(f"[rdfize] {len(doc.triples_maps)} triples maps from {args.mapping}")
+    mapping_plan = not args.no_mapping_plan
+    mplan = None
+    if mapping_plan:
+        from repro.rml.plan import build_plan
+
+        mplan = build_plan(doc)
+        print(f"[rdfize] plan: {len(mplan.exec_plan.ops)} rules over "
+              f"{len(mplan.sources)} sources -> {len(mplan.groups)} "
+              f"groups ({len(mplan.shared)} shared terms factored)")
+    if args.shards and args.emit != "kgz":
+        ap.error("--shards needs --emit kgz (shard stores are .kgz snapshots)")
+
+    group_parallel = (
+        args.out is not None
+        and args.emit == "kgz"
+        and args.shards
+        and args.shard_workers > 1
+        and mplan is not None
+        and len(mplan.groups) > 1
+    )
+    if group_parallel:
+        # whole rule groups are the unit of multiprocess work: each
+        # worker builds its group's sub-KG, the parent unions the
+        # rendered triples and hash-partitions them into shard stores
+        from repro.shard.ingest import ingest_mapping_sharded
+
+        with open(args.mapping, encoding="utf-8") as f:
+            mapping_text = f.read()
+        with obs.span("create_kg_grouped", cat="rdfize",
+                      groups=len(mplan.groups), workers=args.shard_workers):
+            manifest, stats, n_triples = ingest_mapping_sharded(
+                mapping_text, args.data_root, args.out, args.shards,
+                workers=args.shard_workers,
+                engine_opts=dict(
+                    engine=args.engine, join_strategy=args.join,
+                    batch_size=args.batch_size, stream=args.stream,
+                    block_rows=args.block_rows,
+                ),
+            )
+        print(f"[rdfize] {n_triples} unique triples "
+              f"({len(mplan.groups)} rule groups in parallel)")
+        _print_stats(stats)
+        sizes = ", ".join(str(s["n_triples"]) for s in manifest["shards"])
+        print(f"[rdfize] wrote {n_triples}-triple sharded KG "
+              f"({args.shards} shards: {sizes} triples) — manifest "
+              f"at {args.out}")
+        if args.trace:
+            n_ev = obs.save_trace(args.trace)
+            print(f"[rdfize] wrote {n_ev}-event trace to {args.trace}")
+        return
+
     with obs.span("create_kg", cat="rdfize", engine=args.engine,
                   stream=args.stream):
         result = create_kg(
@@ -71,18 +156,11 @@ def main() -> None:
             batch_size=args.batch_size,
             stream=args.stream,
             block_rows=args.block_rows,
+            mapping_plan=mapping_plan,
         )
     print(f"[rdfize] {result.n_triples} unique triples in "
           f"{result.wall_time_s:.2f}s ({result.engine} engine)")
-    for pred, st in result.stats.items():
-        print(
-            f"  {st.kind:5s} {pred.rsplit('/', 1)[-1]:30s} "
-            f"|N_p|={st.n_candidates:>9d} |S_p|={st.n_unique:>9d} "
-            f"phi={int(st.phi_optimized()):>12d} "
-            f"phi_naive={int(st.phi_naive()):>14d}"
-        )
-    if args.shards and args.emit != "kgz":
-        ap.error("--shards needs --emit kgz (shard stores are .kgz snapshots)")
+    _print_stats(result.stats)
     if args.out:
         if args.emit == "kgz" and args.shards:
             from repro.shard.ingest import shard_store

@@ -84,6 +84,15 @@ class TermMap:
             return "{}"  # raw literal value
         return self.constant  # type: ignore[return-value]
 
+    @property
+    def key(self) -> tuple[str, tuple[str, ...]]:
+        """``(pattern, columns)`` — the term map's evaluation identity.
+        Two term maps with the same key over the same logical source
+        produce identical per-row values, which is what lets the mapping
+        planner (:mod:`repro.rml.plan`) factor them into one FunMap-style
+        common subexpression evaluated once per source scan."""
+        return (self.pattern, self.columns)
+
 
 @dataclasses.dataclass(frozen=True)
 class JoinCondition:

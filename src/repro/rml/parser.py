@@ -166,6 +166,8 @@ class _Parser:
         rf = self._get(ls_props, "referenceFormulation")
         if rf and "JSON" in str(rf[0]).upper():
             fmt = "json"
+        elif rf and "TSV" in str(rf[0]).upper():
+            fmt = "tsv"  # ql:TSV — tab-delimited, same reader, different split
         iterator = None
         it = self._get(ls_props, "iterator")
         if it:

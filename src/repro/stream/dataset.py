@@ -57,10 +57,17 @@ class Dataset:
     def _with(self, op: LogicalOp) -> "Dataset":
         return Dataset(self._plan + (op,))
 
-    def project(self, *columns: str, fill: str | None = "") -> "Dataset":
+    def project(
+        self, *columns: str, fill: str | None = "", pushdown: bool = False
+    ) -> "Dataset":
         """Project to ``columns``; ``fill`` is the value for columns absent
-        from a block (``None`` -> strict KeyError)."""
-        return self._with(Project(columns=tuple(columns), fill=fill))
+        from a block (``None`` -> strict KeyError).  ``pushdown=True``
+        marks the projection for the physical rewrite that pushes it into
+        the datasource (planner-driven reads; see
+        :func:`repro.stream.physical.pushdown_projection`)."""
+        return self._with(
+            Project(columns=tuple(columns), fill=fill, pushdown=pushdown)
+        )
 
     def map_blocks(self, fn: Callable[[Block], Block]) -> "Dataset":
         return self._with(MapBlocks(fn=fn))

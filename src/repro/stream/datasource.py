@@ -6,6 +6,17 @@ shard (file).  A ReadTask is a zero-arg callable yielding Blocks of at most
 bounded prefetch queue.  Re-invoking a task re-reads the shard, which is what
 lets the engine replay a predicate after a hash-table overflow without ever
 caching the source in memory.
+
+Every source also supports **projection pushdown**: ``with_columns(keep,
+strict)`` returns a copy that materializes only the ``keep`` columns — a
+pruned CSV column is never even accumulated into a cell list, let alone a
+numpy array.  ``strict=True`` (fixed-schema sources only) makes a missing
+kept column a ``KeyError`` *at read time*, replacing the downstream strict
+``Project``; sources whose schema is per-record or per-shard (JSON, globs)
+refuse strict pushdown and prune tolerantly, leaving the union-fill
+``Project`` in place.  The physical executor applies the rewrite when a
+plan starts ``Read -> Project(pushdown=True)`` (see
+:func:`repro.stream.physical.pushdown_projection`).
 """
 
 from __future__ import annotations
@@ -33,17 +44,35 @@ class Datasource(Protocol):
     def read_tasks(self) -> list[ReadTask]: ...
 
 
+def _plan_metrics(kept: int, pruned: int) -> None:
+    """Account a pushed-down projection at the point it actually takes
+    effect (the reader has seen the real schema)."""
+    from repro.obs import get_registry
+
+    reg = get_registry()
+    reg.inc("plan.columns_kept", kept)
+    reg.inc("plan.columns_pruned", pruned)
+
+
 @dataclasses.dataclass(frozen=True)
 class CSVDatasource:
     """Streaming CSV/TSV reader: never holds more than one block of rows.
 
     Rows shorter than the header are right-padded with ""; extra cells
     beyond the header are dropped (the eager loader crashes on both).
+    With ``keep`` set only those columns are accumulated — pruned cells
+    are skipped before any list/array is built, which is where the
+    planner's wide-source pushdown win comes from.
     """
 
     path: str
     block_rows: int
     delimiter: str = ","
+    keep: tuple[str, ...] | None = None  # projection pushdown
+    strict: bool = True  # keep column missing from header -> KeyError
+
+    def with_columns(self, keep, strict: bool) -> "CSVDatasource":
+        return dataclasses.replace(self, keep=tuple(keep), strict=strict)
 
     def read_tasks(self) -> list[ReadTask]:
         return [ReadTask(read=self._blocks, name=self.path)]
@@ -54,22 +83,36 @@ class CSVDatasource:
             header = next(reader, None)
             if header is None:
                 return
-            width = len(header)
-            cols: list[list[str]] = [[] for _ in header]
+            if self.keep is None:
+                names = list(header)
+                idxs = list(range(len(header)))
+            else:
+                pos = {h: i for i, h in enumerate(header)}
+                if self.strict:
+                    missing = [c for c in self.keep if c not in pos]
+                    if missing:
+                        raise KeyError(
+                            f"columns {missing} not in header of {self.path!r}"
+                        )
+                names = [c for c in self.keep if c in pos]
+                idxs = [pos[c] for c in names]
+                _plan_metrics(len(names), len(header) - len(names))
+            cols: list[list[str]] = [[] for _ in names]
             n = 0
             for row in reader:
-                for i in range(width):
-                    cols[i].append(row[i] if i < len(row) else "")
+                w = len(row)
+                for out, i in enumerate(idxs):
+                    cols[out].append(row[i] if i < w else "")
                 n += 1
                 if n == self.block_rows:
                     yield Block(
-                        {h: np.array(c, dtype=object) for h, c in zip(header, cols)}
+                        {h: np.array(c, dtype=object) for h, c in zip(names, cols)}
                     )
-                    cols = [[] for _ in header]
+                    cols = [[] for _ in names]
                     n = 0
             if n:
                 yield Block(
-                    {h: np.array(c, dtype=object) for h, c in zip(header, cols)}
+                    {h: np.array(c, dtype=object) for h, c in zip(names, cols)}
                 )
 
     def count_rows(self) -> int:
@@ -90,6 +133,14 @@ class JSONDatasource:
     path: str
     block_rows: int
     iterator: str | None = None
+    keep: tuple[str, ...] | None = None  # tolerant projection pushdown
+
+    def with_columns(self, keep, strict: bool) -> "JSONDatasource | None":
+        if strict:
+            # per-record schemas: strictness is a whole-stream property the
+            # executor's union validation pass owns, not a read-time check
+            return None
+        return dataclasses.replace(self, keep=tuple(keep))
 
     def read_tasks(self) -> list[ReadTask]:
         return [ReadTask(read=self._blocks, name=self.path)]
@@ -109,7 +160,15 @@ class JSONDatasource:
     def _chunk(self, parsed) -> Iterator[Block]:
         buf: list = []
         for rec in parsed:
-            buf.extend(expand_iterator(rec, self.iterator))
+            rows = expand_iterator(rec, self.iterator)
+            if self.keep is not None:
+                # pre-fill with "" so a record carrying none of the kept
+                # keys still contributes a row (the union-fill Project
+                # downstream would have produced exactly this block)
+                rows = [
+                    {k: r.get(k, "") for k in self.keep} for r in rows
+                ]
+            buf.extend(rows)
             while len(buf) >= self.block_rows:
                 yield Block.from_records(buf[: self.block_rows])
                 buf = buf[self.block_rows :]
@@ -142,6 +201,12 @@ class GlobDatasource:
     fmt: str = "csv"
     iterator: str | None = None
     delimiter: str | None = None
+    keep: tuple[str, ...] | None = None  # tolerant pushdown into each shard
+
+    def with_columns(self, keep, strict: bool) -> "GlobDatasource | None":
+        if strict:
+            return None  # shards may have heterogeneous schemas
+        return dataclasses.replace(self, keep=tuple(keep))
 
     def read_tasks(self) -> list[ReadTask]:
         return [t for s in self._shards() for t in s.read_tasks()]
@@ -155,12 +220,17 @@ class GlobDatasource:
             # a typo'd path must fail loudly like the eager loader's open(),
             # not produce an empty KG
             raise FileNotFoundError(f"no files match source glob {self.pattern!r}")
-        return [
+        shards = [
             make_datasource(
                 path, self.fmt, self.block_rows, self.iterator, self.delimiter
             )
             for path in paths
         ]
+        if self.keep is not None:
+            shards = [
+                s.with_columns(self.keep, strict=False) or s for s in shards
+            ]
+        return shards
 
 
 @dataclasses.dataclass(frozen=True)
@@ -170,14 +240,31 @@ class TableDatasource:
 
     columns: dict[str, np.ndarray]
     block_rows: int
+    keep: tuple[str, ...] | None = None
+    strict: bool = True
+
+    def with_columns(self, keep, strict: bool) -> "TableDatasource":
+        return dataclasses.replace(self, keep=tuple(keep), strict=strict)
 
     def read_tasks(self) -> list[ReadTask]:
         return [ReadTask(read=self._blocks, name="<table>")]
 
+    def _view(self) -> dict[str, np.ndarray]:
+        if self.keep is None:
+            return self.columns
+        if self.strict:
+            missing = [c for c in self.keep if c not in self.columns]
+            if missing:
+                raise KeyError(f"columns {missing} not in table source")
+        view = {c: self.columns[c] for c in self.keep if c in self.columns}
+        _plan_metrics(len(view), len(self.columns) - len(view))
+        return view
+
     def _blocks(self) -> Iterator[Block]:
+        view = self._view()
         for start in range(0, self.count_rows(), self.block_rows):
             yield Block(
-                {k: v[start : start + self.block_rows] for k, v in self.columns.items()}
+                {k: v[start : start + self.block_rows] for k, v in view.items()}
             )
 
     def count_rows(self) -> int:

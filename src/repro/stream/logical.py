@@ -1,9 +1,27 @@
 """Logical plan nodes — what a Dataset *will* do, recorded lazily.
 
 The plan is a linear chain ``Read -> (Project | MapBlocks | Encode)* ->
-Batch?``; :mod:`repro.stream.physical` lowers it by fusing all consecutive
-per-block transforms into one operator so a block makes a single pass
-through Python per stage boundary.
+Batch?``.  Nothing here executes; :mod:`repro.stream.physical` lowers the
+chain by (a) rewriting a leading ``Read -> Project(pushdown=True)`` pair
+into the datasource itself — the reader then never materializes a pruned
+column (see :func:`repro.stream.physical.pushdown_projection`) — and
+(b) fusing all consecutive per-block transforms into one operator so a
+block makes a single pass through Python per stage boundary.
+
+``Project`` carries the planner-relevant policy in two fields:
+
+* ``fill`` — ``""`` union-fills columns missing from a block (the right
+  semantics for heterogeneous JSON records and glob shards); ``None`` is
+  *strict* and raises ``KeyError`` on a missing column, which is what the
+  mapping planner (:mod:`repro.rml.plan`) demands for fixed-schema
+  sources — a missing mapped column is a typo, not heterogeneity, and
+  must fail loudly rather than fabricate empty-string terms.
+* ``pushdown`` — opt-in marker set by planner-driven projections; only a
+  marked Project is pushed into the reader, so ad-hoc Dataset users (and
+  the planner-off reference path) keep the read-everything behavior.
+
+``Encode`` is the one stateful node: its dictionary is shared and
+append-only, so ids are stable across blocks and across overflow replays.
 """
 
 from __future__ import annotations
@@ -31,6 +49,7 @@ class Read(LogicalOp):
 class Project(LogicalOp):
     columns: tuple[str, ...]
     fill: str | None = ""  # None -> strict (KeyError on missing column)
+    pushdown: bool = False  # planner-driven: push into the datasource
 
 
 @dataclasses.dataclass(frozen=True)

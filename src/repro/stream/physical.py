@@ -1,8 +1,10 @@
 """Physical plan: lowering + pipelined execution with bounded prefetch.
 
-Lowering fuses each run of per-block logical ops (Project / MapBlocks /
-Encode) into a single :class:`FusedMapOperator`; ``Batch`` becomes a
-:class:`RebatchOperator`.  Execution is a chain of generators with the read
+Lowering first applies :func:`pushdown_projection` — a planner-marked
+``Read -> Project`` prefix collapses into the datasource so pruned columns
+are never materialized — then fuses each run of per-block logical ops
+(Project / MapBlocks / Encode) into a single :class:`FusedMapOperator`;
+``Batch`` becomes a :class:`RebatchOperator`.  Execution is a chain of generators with the read
 stage handed off to a background thread through a bounded queue, so disk I/O
 and parsing overlap the jitted compute of the consumer — the classic
 two-stage pipeline — while the queue bound keeps at most
@@ -195,8 +197,42 @@ def _op_fn(op: LogicalOp) -> tuple[str, Callable[[Block], Block]]:
     raise TypeError(f"not a per-block op: {op!r}")
 
 
+def pushdown_projection(plan: tuple[LogicalOp, ...]) -> tuple[LogicalOp, ...]:
+    """Rewrite a leading ``Read -> Project(pushdown=True)`` pair so the
+    datasource itself materializes only the projected columns.
+
+    Strict projections (``fill=None``) are *replaced* by the reader when
+    the source accepts strict pushdown — a missing mapped column then
+    raises ``KeyError`` at read time, before a single row is built.
+    Tolerant (union-fill) projections keep the ``Project`` node: the
+    pruned reader emits whatever subset of the columns each shard/record
+    has, and the Project still fills the gaps.  Sources without a
+    ``with_columns`` hook (or that decline — e.g. strict pushdown into a
+    per-record-schema JSON source) leave the plan untouched.
+    """
+    if (
+        len(plan) < 2
+        or not isinstance(plan[0], Read)
+        or not isinstance(plan[1], Project)
+        or not plan[1].pushdown
+        or not plan[1].columns
+    ):
+        return plan
+    prj = plan[1]
+    hook = getattr(plan[0].source, "with_columns", None)
+    if hook is None:
+        return plan
+    strict = prj.fill is None
+    pushed = hook(prj.columns, strict)
+    if pushed is None:
+        return plan
+    rest = plan[2:] if strict else plan[1:]
+    return (Read(pushed),) + tuple(rest)
+
+
 def execute(plan: tuple[LogicalOp, ...], prefetch: int = 2) -> Iterator[Block]:
     """Lower the logical plan and run it as a pipelined block iterator."""
+    plan = pushdown_projection(plan)
     if not plan or not isinstance(plan[0], Read):
         raise ValueError("logical plan must start with a Read")
     it: Iterator[Block] = _read_blocks(plan[0].source)
